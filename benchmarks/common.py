@@ -1,0 +1,56 @@
+"""Shared benchmark harness helpers."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.cbtree import CBTree
+from repro.core.ref_py import SplayList
+from repro.core.skiplist import SkipList
+from repro.core import workload as wl
+
+
+def run_python_engine(engine, stream: wl.OpStream, measure_ops: int
+                      ) -> Dict[str, float]:
+    """Populate, then time `measure_ops` contains-dominated ops.
+    Returns ops/sec + average path length."""
+    for k in stream.populate:
+        engine.insert(int(k))
+    kinds, keys, upd = stream.kinds, stream.keys, stream.upd
+    t0 = time.perf_counter()
+    plen = 0
+    for i in range(measure_ops):
+        kind = kinds[i]
+        k = int(keys[i])
+        if kind == wl.OP_CONTAINS:
+            if isinstance(engine, SkipList):
+                engine.find(k)
+            elif isinstance(engine, CBTree):
+                engine.contains(k, upd=bool(upd[i]))
+            else:
+                engine.contains(k, upd=bool(upd[i]))
+        elif kind == wl.OP_INSERT:
+            engine.insert(k)
+        else:
+            engine.delete(k)
+        plen += engine.last_path_len
+    dt = time.perf_counter() - t0
+    return {"ops_per_sec": measure_ops / dt,
+            "avg_path": plen / measure_ops}
+
+
+def make_engine(name: str, p: float, max_level: int = 24):
+    if name == "skiplist":
+        return SkipList(max_level=max_level)
+    if name == "splaylist":
+        return SplayList(max_level=max_level, p=p)
+    if name == "cbtree":
+        return CBTree(p=p)
+    raise ValueError(name)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.3f},{derived}")

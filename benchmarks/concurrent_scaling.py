@@ -1,0 +1,84 @@
+"""Figures 3-5: 'concurrent' throughput scaling.
+
+CPU locks -> TPU batch lanes (DESIGN.md §2): a batch of B lock-free
+searches runs data-parallel (vmap) against a state snapshot, updates fold
+serially — so B plays the role of the paper's thread count.  We measure
+JAX-engine throughput vs B for the splay-list (p in {1/10, 1/100}) and the
+skip-list baseline, on the three skewed workloads."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import skiplist as skx
+from repro.core import splaylist as sx
+from repro.core import workload as wl
+
+
+def _populate_splay(n, ml, cap, keys):
+    st = sx.make(capacity=cap, max_level=ml)
+    kinds = jnp.full((len(keys),), sx.OP_INSERT, jnp.int32)
+    st, _, _ = sx.run_ops(st, kinds, jnp.asarray(keys, jnp.int32),
+                          jnp.ones((len(keys),), bool))
+    return st
+
+
+def _populate_skip(n, ml, cap, keys, seed=0):
+    st = skx.make(capacity=cap, max_level=ml)
+    kinds = jnp.full((len(keys),), skx.OP_INSERT, jnp.int32)
+    h = skx.sample_heights(np.random.default_rng(seed), len(keys), ml)
+    st, _, _ = skx.run_ops(st, kinds, jnp.asarray(keys, jnp.int32), h)
+    return st
+
+
+def run(n: int = 4096, total_ops: int = 65536, quick: bool = False):
+    if quick:
+        n, total_ops = 2048, 16384
+    ml, cap = 20, 2 * n + 4
+    results = {}
+    for x, y, tag in [(0.90, 0.10, "90-10"), (0.99, 0.01, "99-1")]:
+        w = wl.xy_workload(n, x, y, total_ops, seed=9)
+        keys = np.sort(w.populate)
+        for B in (16, 64, 256):
+            ops_q = w.keys[:total_ops].reshape(-1, B)
+            # splay-list, p = 1/100
+            st = _populate_splay(n, ml, cap, keys)
+            rng = np.random.default_rng(1)
+            # warmup/compile
+            st, _, _ = sx.run_contains_batch(
+                st, jnp.asarray(ops_q[0]), jnp.zeros((B,), bool))
+            t0 = time.perf_counter()
+            psum = 0
+            for i in range(ops_q.shape[0]):
+                coins = rng.random(B) < 0.01
+                st, res, steps = sx.run_contains_batch(
+                    st, jnp.asarray(ops_q[i]), jnp.asarray(coins))
+                psum += int(steps.sum())
+            dt = time.perf_counter() - t0
+            tput = total_ops / dt
+            emit(f"fig_concurrent_{tag}_splay_B{B}", 1e6 / tput,
+                 f"ops_s={tput:.0f};path={psum/total_ops:.2f}")
+            results[(tag, "splay", B)] = tput
+            # skip-list baseline
+            stk = _populate_skip(n, ml, cap, keys)
+            stk, _, _ = skx.run_contains_batch(stk, jnp.asarray(ops_q[0]))
+            t0 = time.perf_counter()
+            ssum = 0
+            for i in range(ops_q.shape[0]):
+                stk, res, steps = skx.run_contains_batch(
+                    stk, jnp.asarray(ops_q[i]))
+                ssum += int(steps.sum())
+            dt = time.perf_counter() - t0
+            tput_k = total_ops / dt
+            emit(f"fig_concurrent_{tag}_skip_B{B}", 1e6 / tput_k,
+                 f"ops_s={tput_k:.0f};path={ssum/total_ops:.2f}")
+            results[(tag, "skip", B)] = tput_k
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=True)

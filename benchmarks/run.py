@@ -1,0 +1,47 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV.  --full for paper-scale sizes
+(1e5 keys); default is the quick profile used by bench_output.txt."""
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (seq_tables, concurrent_scaling, uniform_zipf,
+                            general_workloads, long_run,
+                            height_correlation, kernels_bench,
+                            roofline_table)
+    modules = {
+        "seq_tables": lambda: seq_tables.run(quick=quick),
+        "concurrent_scaling": lambda: concurrent_scaling.run(quick=quick),
+        "uniform_zipf": lambda: uniform_zipf.run(quick=quick),
+        "general_workloads": lambda: general_workloads.run(quick=quick),
+        "long_run": lambda: long_run.run(quick=quick),
+        "height_correlation": lambda: height_correlation.run(quick=quick),
+        "kernels_bench": lambda: kernels_bench.run(quick=quick),
+        "roofline_table": lambda: roofline_table.run(),
+    }
+    only = set(args.only.split(",")) if args.only else None
+    for name, fn in modules.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report failure
+            print(f"{name},FAILED,{type(e).__name__}:{e}", flush=True)
+            raise
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: the splay-list as a distribution-adaptive ordered map.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import splaylist as sx
+from repro.core import workload as wl
+from repro.core.ref_py import SplayList
+from repro.core.skiplist import SkipList
+
+
+def main():
+    # --- 1. sequential splay-list: adapts to a skewed workload ---------
+    print("== sequential splay-list vs skip-list on a 99-1 workload ==")
+    w = wl.xy_workload(n=5000, x=0.99, y=0.01, ops=50_000, p=0.1, seed=0)
+    splay, skip = SplayList(max_level=22, p=0.1), SkipList(max_level=22)
+    for k in w.populate:
+        splay.insert(int(k))
+        skip.insert(int(k))
+    ps = pk = 0
+    for k, coin in zip(w.keys, w.upd):
+        splay.contains(int(k), upd=bool(coin))
+        ps += splay.last_path_len
+        skip.find(int(k))
+        pk += skip.last_path_len
+    print(f"avg path  splay-list: {ps/len(w.keys):6.2f}   "
+          f"skip-list: {pk/len(w.keys):6.2f}")
+
+    # --- 2. the JAX engine: batched lock-free searches ------------------
+    print("\n== JAX engine: batched search + serialized relaxed updates ==")
+    st = sx.make(capacity=2048, max_level=18)
+    keys = jnp.asarray(np.arange(0, 1000, 2, dtype=np.int32))
+    st, _, _ = sx.run_ops(
+        st, jnp.full((len(keys),), sx.OP_INSERT, jnp.int32), keys,
+        jnp.ones((len(keys),), bool))
+    queries = jnp.asarray(np.random.default_rng(0).choice(
+        np.arange(0, 1000, 2), 256).astype(np.int32))
+    st, found, steps = sx.run_contains_batch(
+        st, queries, jnp.asarray(np.random.default_rng(1).random(256) < 0.1))
+    print(f"batch of 256 searches: found={int(found.sum())}, "
+          f"mean path={float(steps.mean()):.1f}")
+
+    # --- 3. heights reflect popularity ----------------------------------
+    hot = queries[:16]
+    for _ in range(30):
+        st, _, _ = sx.run_contains_batch(
+            st, hot, jnp.ones((16,), bool))
+    h = sx.heights(st)
+    hot_keys = [int(k) for k in np.asarray(hot)]
+    hot_h = np.mean([h[k] for k in hot_keys])
+    all_h = np.mean(list(h.values()))
+    print(f"mean height: hammered keys {hot_h:.2f} vs all {all_h:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Paper-workload explorer: run any n-x-y / zipf workload against all
+three engines and print the Tables-1-3-style comparison.
+
+Run:  PYTHONPATH=src python examples/splay_workloads.py --n 20000 \
+          --x 0.95 --y 0.05 --ops 50000
+"""
+
+import argparse
+
+from benchmarks.common import make_engine, run_python_engine
+from repro.core import workload as wl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--x", type=float, default=0.95)
+    ap.add_argument("--y", type=float, default=0.05)
+    ap.add_argument("--ops", type=int, default=50000)
+    ap.add_argument("--zipf", action="store_true")
+    args = ap.parse_args()
+
+    if args.zipf:
+        stream = wl.zipf_workload(args.n, args.ops, seed=1)
+        name = f"zipf(1) n={args.n}"
+    else:
+        stream = wl.xy_workload(args.n, args.x, args.y, args.ops, seed=1)
+        name = f"{args.n}-{int(args.x*100)}-{int(args.y*100)}"
+    print(f"workload {name}, {args.ops} contains ops")
+    print(f"{'engine':24s} {'ops/s':>10s} {'avg path':>9s}")
+    for engine, p in [("skiplist", 1.0), ("splaylist", 1.0),
+                      ("splaylist", 0.1), ("splaylist", 0.01),
+                      ("cbtree", 0.01)]:
+        s = stream._replace(upd=stream.upd if p >= 1 else (
+            __import__("numpy").random.default_rng(0).random(args.ops) < p))
+        r = run_python_engine(make_engine(engine, p), s, args.ops)
+        print(f"{engine + f' p={p}':24s} {r['ops_per_sec']:10.0f} "
+              f"{r['avg_path']:9.2f}")
+
+
+if __name__ == "__main__":
+    main()

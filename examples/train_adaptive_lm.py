@@ -1,0 +1,23 @@
+"""End-to-end driver: train a (reduced) qwen2-family model on a Zipf
+token stream with the splay vocab cache adapting online, checkpointing,
+and auto-resume.
+
+Run:  PYTHONPATH=src python examples/train_adaptive_lm.py
+(The full-size run is the same command with --arch qwen2-0.5b and no
+--smoke on a real mesh.)
+"""
+
+from repro.launch import train
+
+
+def main():
+    train.main([
+        "--arch", "qwen2-0.5b", "--smoke",
+        "--steps", "60", "--batch", "4", "--seq", "128",
+        "--ckpt-dir", "/tmp/repro_quickstart_ckpt",
+        "--ckpt-every", "25", "--log-every", "10",
+    ])
+
+
+if __name__ == "__main__":
+    main()

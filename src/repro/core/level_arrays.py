@@ -1,0 +1,70 @@
+"""Level-array export: the TPU-native splay-list layout (DESIGN.md §5).
+
+Pointer chasing is hostile to TPUs, so the batched search kernel consumes
+the splay-list as a dense rectangle ``level_keys[n_levels, width]``:
+row r holds (sorted, +INF-padded) the keys whose splay height is at least
+(top - r) — row 0 is the hottest, the last row is the full key set.  A
+search touches rows top-down and stops at the first row containing the
+key; by the splay property hot keys live in the small top rows, which stay
+VMEM-resident.  This is the paper's "popular elements move up" realized in
+the TPU memory hierarchy instead of list levels.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.core import splaylist as sx
+
+PAD_KEY = np.int32(2 ** 31 - 1)
+
+
+class LevelArrays(NamedTuple):
+    keys: np.ndarray        # int32 [n_levels, width], +INF padded, sorted
+    widths: np.ndarray      # int32 [n_levels], live entries per row
+    heights: np.ndarray     # int32 [width]: splay height of bottom row keys
+
+
+def from_state(st: sx.SplayState, min_levels: int = 2,
+               width: Optional[int] = None) -> LevelArrays:
+    """Build level arrays from a JAX splay-list state (host-side)."""
+    s = sx.to_numpy(st)
+    zl = int(s["zl"])
+    alive = (np.arange(st.capacity) >= 2) & (np.arange(st.capacity) <
+                                             int(s["n_alloc"]))
+    alive &= ~s["deleted"] & (s["key"] < PAD_KEY)
+    keys = s["key"][alive].astype(np.int32)
+    rel_h = (s["top"][alive] - zl).astype(np.int32)
+    return build(keys, rel_h, min_levels=min_levels, width=width)
+
+
+def from_heights(keys: np.ndarray, rel_heights: np.ndarray,
+                 **kw) -> "LevelArrays":
+    return build(np.asarray(keys, np.int32),
+                 np.asarray(rel_heights, np.int32), **kw)
+
+
+def build(keys: np.ndarray, rel_h: np.ndarray, min_levels: int = 2,
+          width: Optional[int] = None) -> LevelArrays:
+    order = np.argsort(keys)
+    keys, rel_h = keys[order], rel_h[order]
+    max_h = int(rel_h.max()) if len(rel_h) else 0
+    n_levels = max(max_h + 1, min_levels)
+    width = width or (len(keys) if len(keys) else 1)
+    assert width >= len(keys)
+    rows = []
+    widths = []
+    for r in range(n_levels):
+        h = n_levels - 1 - r            # row 0 = highest level
+        sel = keys[rel_h >= h]
+        row = np.full((width,), PAD_KEY, np.int32)
+        row[:len(sel)] = sel
+        rows.append(row)
+        widths.append(len(sel))
+    hb = np.full((width,), 0, np.int32)
+    hb[:len(keys)] = rel_h
+    return LevelArrays(keys=np.stack(rows), widths=np.asarray(widths,
+                                                              np.int32),
+                       heights=hb)

@@ -1,0 +1,293 @@
+"""Classic (non-adaptive) skip-list baselines — Python + JAX.
+
+The paper's primary baseline: Pugh-style skip-list with geometric random
+heights (p = 1/2).  The Python engine drives the sequential tables
+(Tables 1-3); the JAX engine drives the batched/"concurrent" figures on
+the same harness as the splay-list.  The search loop and the path-length
+metric are deliberately identical to the splay-list's, so path-length
+comparisons are apples-to-apples.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -(1 << 62)
+POS_INF = (1 << 62)
+
+NEG_INF_32 = -(2 ** 31) + 1
+POS_INF_32 = 2 ** 31 - 1
+
+OP_CONTAINS = 0
+OP_INSERT = 1
+OP_DELETE = 2
+
+HEAD = 0
+TAIL = 1
+
+
+# ---------------------------------------------------------------------------
+# Python engine
+# ---------------------------------------------------------------------------
+
+class _Node:
+    __slots__ = ("key", "nxt", "top", "deleted")
+
+    def __init__(self, key, top, max_level):
+        self.key = key
+        self.top = top
+        self.nxt = [None] * (max_level + 1)
+        self.deleted = False
+
+
+class SkipList:
+    """Sequential skip-list with lazy deletion (marking)."""
+
+    def __init__(self, max_level: int = 32,
+                 rng: Optional[random.Random] = None):
+        self.max_level = max_level
+        self.ML1 = max_level - 1
+        self.rng = rng or random.Random(0xBEEF)
+        self.head = _Node(NEG_INF, max_level, max_level)
+        self.tail = _Node(POS_INF, max_level, max_level)
+        for h in range(max_level + 1):
+            self.head.nxt[h] = self.tail
+        self.size = 0
+        self.last_path_len = 0
+
+    def _rand_height(self) -> int:
+        h = 0
+        while h < self.ML1 and self.rng.random() < 0.5:
+            h += 1
+        return h
+
+    def find(self, key) -> Tuple[Optional[_Node], int]:
+        pred = self.head
+        steps = 0
+        found = None
+        for h in range(self.ML1, -1, -1):
+            curr = pred.nxt[h]
+            while curr.key <= key:
+                pred = curr
+                curr = pred.nxt[h]
+                steps += 1
+            steps += 1
+            if pred.key == key:
+                found = pred
+                break
+        self.last_path_len = steps
+        return (found if found is not None and found is not self.head
+                else None), steps
+
+    def contains(self, key) -> bool:
+        node, _ = self.find(key)
+        return node is not None and not node.deleted
+
+    def insert(self, key) -> bool:
+        # collect predecessors at every level
+        preds = [None] * (self.max_level + 1)
+        pred = self.head
+        for h in range(self.ML1, -1, -1):
+            curr = pred.nxt[h]
+            while curr.key <= key:
+                pred = curr
+                curr = pred.nxt[h]
+            preds[h] = pred
+        if pred.key == key:
+            if pred.deleted:
+                pred.deleted = False
+                self.size += 1
+                return True
+            return False
+        top = self._rand_height()
+        node = _Node(key, top, self.max_level)
+        for h in range(top + 1):
+            node.nxt[h] = preds[h].nxt[h]
+            preds[h].nxt[h] = node
+        self.size += 1
+        return True
+
+    def delete(self, key) -> bool:
+        node, _ = self.find(key)
+        if node is None or node.deleted:
+            return False
+        node.deleted = True
+        self.size -= 1
+        return True
+
+
+# ---------------------------------------------------------------------------
+# JAX engine (same array representation as the splay-list, minus counters)
+# ---------------------------------------------------------------------------
+
+class SkipState(NamedTuple):
+    key: jax.Array        # [C]
+    nxt: jax.Array        # [L, C]
+    top: jax.Array        # [C]
+    deleted: jax.Array    # [C]
+    n_alloc: jax.Array
+    size: jax.Array
+
+    @property
+    def max_level(self) -> int:
+        return self.nxt.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.key.shape[0]
+
+
+def make(capacity: int, max_level: int = 20,
+         key_dtype=jnp.int32) -> SkipState:
+    key = jnp.full((capacity,), POS_INF_32, dtype=key_dtype)
+    key = key.at[HEAD].set(NEG_INF_32)
+    nxt = jnp.full((max_level, capacity), -1, jnp.int32)
+    nxt = nxt.at[:, HEAD].set(TAIL)
+    top = jnp.zeros((capacity,), jnp.int32)
+    top = top.at[HEAD].set(max_level - 1).at[TAIL].set(max_level - 1)
+    return SkipState(
+        key=key, nxt=nxt, top=top,
+        deleted=jnp.zeros((capacity,), bool),
+        n_alloc=jnp.array(2, jnp.int32), size=jnp.array(0, jnp.int32))
+
+
+def find(st: SkipState, k) -> Tuple[jax.Array, jax.Array]:
+    ml1 = st.max_level - 1
+
+    def cond(c):
+        pred, h, steps, found = c
+        return (h >= 0) & (~found)
+
+    def body(c):
+        pred, h, steps, found = c
+        curr = st.nxt[h, pred]
+        adv = st.key[curr] <= k
+        pred2 = jnp.where(adv, curr, pred)
+        found2 = jnp.where(adv, found, st.key[pred] == k)
+        h2 = jnp.where(adv, h, h - 1)
+        return pred2, h2, steps + 1, found2
+
+    pred, h, steps, found = jax.lax.while_loop(
+        cond, body, (jnp.array(HEAD, jnp.int32), jnp.array(ml1, jnp.int32),
+                     jnp.array(0, jnp.int32), jnp.array(False)))
+    found = found | (st.key[pred] == k)
+    slot = jnp.where(found & (pred != HEAD), pred, -1)
+    return slot.astype(jnp.int32), steps
+
+
+def find_batch(st: SkipState, ks):
+    return jax.vmap(lambda k: find(st, k))(ks)
+
+
+def _find_preds(st: SkipState, k):
+    """Predecessor slot at every level (for insert)."""
+    L = st.max_level
+
+    def body(h_rev, c):
+        preds, pred = c
+        h = L - 1 - h_rev
+
+        def cond(p):
+            return st.key[st.nxt[h, p]] <= k
+
+        pred = jax.lax.while_loop(cond, lambda p: st.nxt[h, p], pred)
+        return preds.at[h].set(pred), pred
+
+    preds0 = jnp.zeros((L,), jnp.int32)
+    preds, pred = jax.lax.fori_loop(
+        0, L, body, (preds0, jnp.array(HEAD, jnp.int32)))
+    return preds, pred
+
+
+def insert(st: SkipState, k, height) -> Tuple[SkipState, jax.Array, jax.Array]:
+    """height: pre-sampled geometric height for this op (int32)."""
+    preds, pred = _find_preds(st, k)
+    present = st.key[pred] == k
+    marked = present & st.deleted[pred]
+
+    def case_revive(s):
+        return s._replace(deleted=s.deleted.at[pred].set(False),
+                          size=s.size + 1)
+
+    def case_new(s):
+        j = s.n_alloc
+        lvls = jnp.arange(s.max_level)
+        link = lvls <= height
+        old_succ = s.nxt[lvls, preds]
+        # order matters: write j's pointers first, then preds'
+        nxt1 = s.nxt.at[:, j].set(jnp.where(link, old_succ, -1))
+        nxt1 = nxt1.at[lvls, jnp.where(link, preds, s.capacity)].set(
+            jnp.broadcast_to(j, lvls.shape), mode="drop")
+        return s._replace(
+            key=s.key.at[j].set(k.astype(s.key.dtype)),
+            nxt=nxt1,
+            top=s.top.at[j].set(height),
+            deleted=s.deleted.at[j].set(False),
+            n_alloc=s.n_alloc + 1, size=s.size + 1)
+
+    st = jax.lax.cond(
+        marked, case_revive,
+        lambda s: jax.lax.cond(present, lambda x: x, case_new, s), st)
+    return st, ~present | marked, jnp.zeros((), jnp.int32)
+
+
+def delete(st: SkipState, k) -> Tuple[SkipState, jax.Array, jax.Array]:
+    slot, steps = find(st, k)
+    ok = (slot >= 0) & ~st.deleted[jnp.maximum(slot, 0)]
+    st = jax.lax.cond(
+        ok,
+        lambda s: s._replace(
+            deleted=s.deleted.at[jnp.maximum(slot, 0)].set(True),
+            size=s.size - 1),
+        lambda s: s, st)
+    return st, ok, steps
+
+
+@jax.jit
+def run_ops(st: SkipState, kinds, keys, heights):
+    """Operation-stream driver; `heights` pre-sampled per op."""
+
+    def step(s, op):
+        kind, k, hgt = op
+
+        def c_contains(a):
+            s, k, _ = a
+            slot, steps = find(s, k)
+            return s, (slot >= 0) & ~s.deleted[jnp.maximum(slot, 0)], steps
+
+        def c_insert(a):
+            s, k, hgt = a
+            return insert(s, k, hgt)
+
+        def c_delete(a):
+            s, k, _ = a
+            return delete(s, k)
+
+        s_out, res, plen = jax.lax.switch(
+            kind, [c_contains, c_insert, c_delete], (s, k, hgt))
+        return s_out, (res, plen)
+
+    st, (res, plen) = jax.lax.scan(step, st, (kinds, keys, heights))
+    return st, res, plen
+
+
+@jax.jit
+def run_contains_batch(st: SkipState, keys):
+    slots, steps = find_batch(st, keys)
+    ok = (slots >= 0) & ~st.deleted[jnp.maximum(slots, 0)]
+    return st, ok, steps
+
+
+def sample_heights(rng: np.random.Generator, n: int, max_level: int):
+    """Pre-sampled geometric(1/2) heights for the JAX engine."""
+    u = rng.random(n)
+    h = np.minimum(
+        np.floor(-np.log2(np.maximum(u, 1e-12))).astype(np.int32),
+        max_level - 1)
+    return jnp.asarray(h)

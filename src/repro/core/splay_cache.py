@@ -1,0 +1,113 @@
+"""Splay-tiered adaptive embedding cache — the framework integration of
+the paper's technique (DESIGN.md §3).
+
+Token frequencies are Zipf-distributed; the splay-list run over the token
+stream assigns each id a height calibrated to its frequency
+(height >= h*  <=>  freq >= m/2^(k-h*), Lemma 2).  The cache maps heights
+to memory tiers:
+
+    tier 0 (height >= h*):   hot buffer, VMEM-resident in the Pallas
+                             gather (kernels/hot_gather.py);
+    tier 1 (rest):           full table in HBM.
+
+Refresh is *relaxed* exactly like the paper's rebalancing: hit counting
+runs on a Bernoulli(1/c) subsample of batches, and the hot set is
+recomputed every `refresh_every` steps with hysteresis (a resident id is
+evicted only when it falls two levels below the admission height),
+mirroring ascent/descent thresholds' factor-2 separation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class SplayVocabCache:
+    vocab: int
+    hot_size: int = 4096
+    update_prob: float = 0.01       # the paper's p = 1/c
+    refresh_every: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        self.counts = np.zeros(self.vocab, np.int64)
+        self.m = 0
+        self.hot_ids = np.zeros((0,), np.int32)
+        self.hot_rank = np.full(self.vocab, -1, np.int32)
+        self.steps = 0
+        self.rng = np.random.default_rng(self.seed)
+        self._hot_buf = None
+
+    # -- bookkeeping (host side, like the paper's relaxed counters) -------
+
+    def observe(self, token_ids: np.ndarray) -> None:
+        """Count a batch of token ids with probability update_prob."""
+        self.steps += 1
+        if self.rng.random() < self.update_prob or self.m == 0:
+            ids, cnt = np.unique(np.asarray(token_ids).ravel(),
+                                 return_counts=True)
+            self.counts[ids] += cnt
+            self.m += int(cnt.sum())
+        if self.steps % self.refresh_every == 0:
+            self.refresh()
+
+    def heights(self) -> np.ndarray:
+        """Splay heights from counts: h(x) = max(0, k - ceil(log2(m/f)))."""
+        k = max(int(self.m).bit_length() - 1, 0)
+        f = np.maximum(self.counts, 1)
+        lg = np.log2(np.maximum(self.m / f, 1.0)).astype(np.int64)
+        return np.maximum(k - lg, 0)
+
+    def refresh(self, table: Optional[jax.Array] = None) -> None:
+        """Recompute the hot set with hysteresis."""
+        if self.m == 0:
+            return
+        k = max(int(self.m).bit_length() - 1, 0)
+        h = np.maximum(
+            k - np.log2(np.maximum(self.m / np.maximum(self.counts, 1),
+                                   1.0)).astype(np.int64), 0)
+        # admission height: smallest h* admitting <= hot_size ids
+        order = np.argsort(-h, kind="stable")
+        cand = order[:self.hot_size]
+        h_star = h[cand[-1]] if len(cand) else 0
+        keep = np.intersect1d(self.hot_ids,
+                              np.nonzero(h >= max(h_star - 2, 0))[0])
+        new = cand[~np.isin(cand, keep)][:self.hot_size - len(keep)]
+        self.hot_ids = np.concatenate([keep, new]).astype(np.int32)
+        self.hot_rank = np.full(self.vocab, -1, np.int32)
+        self.hot_rank[self.hot_ids] = np.arange(len(self.hot_ids),
+                                                dtype=np.int32)
+        self._hot_buf = None        # invalidate
+
+    # -- device side ---------------------------------------------------------
+
+    def hot_buffer(self, table: jax.Array) -> jax.Array:
+        if self._hot_buf is None or self._hot_buf.shape[0] != len(
+                self.hot_ids):
+            self._hot_buf = (table[jnp.asarray(self.hot_ids)]
+                             if len(self.hot_ids) else
+                             jnp.zeros((1, table.shape[1]), table.dtype))
+        return self._hot_buf
+
+    def lookup(self, table: jax.Array, ids: jax.Array) -> jax.Array:
+        """Two-tier gather via the Pallas kernels."""
+        if len(self.hot_ids) == 0:
+            return table[ids]
+        shape = ids.shape
+        flat = ids.reshape(-1)
+        out = kops.hot_gather(table, self.hot_buffer(table),
+                              jnp.asarray(self.hot_rank), flat)
+        return out.reshape(*shape, table.shape[1])
+
+    def hit_rate(self, ids: np.ndarray) -> float:
+        if len(self.hot_ids) == 0:
+            return 0.0
+        return float(np.mean(self.hot_rank[np.asarray(ids).ravel()] >= 0))

@@ -1,0 +1,643 @@
+"""Functional JAX splay-list engine.
+
+Array-backed implementation of the splay-list with the forward-pass
+rebalancing of Section 5, bit-exact against the pure-Python oracle
+(``repro.core.ref_py``) — the test suite runs identical operation streams
+through both and asserts equal results, path lengths, and final heights.
+
+Representation (capacity ``C`` slots, ``L = max_level`` data levels, one
+sentinel level on top; slot 0 = head, slot 1 = tail):
+
+    key       int  [C]      NEG/POS_INF sentinels at slots 0/1
+    nxt       int32[L+1, C] successor slot per level (-1 = unmaterialized)
+    hits      cnt  [L+1, C] hits_u^h  (interval-sum semantics)
+    selfhits  cnt  [C]      sh_u
+    top       int32[C]      topmost level of the node
+    nzero     int32[C]      lowest *materialized* level (lazy expansion)
+    deleted   bool [C]
+    m, dhits  cnt  []       total hit-ops / hits on marked nodes
+    zl        int32[]       current bottom level of the list
+    n_alloc   int32[]       bump allocator
+    size      int32[]       unmarked key count
+
+Counters use ``count_dtype`` (default int32: exact for m < 2^30; pass
+int64 under jax_enable_x64 for longer runs).  Threshold comparisons are
+exact integer shifts: ``s <= m/2^e  <=>  s <= (m >> e)`` and
+``s > m/2^e  <=>  s > (m >> e)``.
+
+Concurrency mapping (see DESIGN.md §2): the paper's lock-free search phase
+is `find`/`find_batch` (pure, vmappable); the hand-over-hand locked update
+phase is the serialized `update` fold inside `run_ops`/`run_batch` — a
+total order over updates, which is precisely the guarantee hand-over-hand
+locking provides in the C++ implementation.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF_32 = -(2 ** 31) + 1
+POS_INF_32 = 2 ** 31 - 1
+
+# op kinds for run_ops
+OP_CONTAINS = 0
+OP_INSERT = 1
+OP_DELETE = 2
+
+HEAD = 0
+TAIL = 1
+
+
+class SplayState(NamedTuple):
+    key: jax.Array        # [C]
+    nxt: jax.Array        # [L+1, C]
+    hits: jax.Array       # [L+1, C]
+    selfhits: jax.Array   # [C]
+    top: jax.Array        # [C]
+    nzero: jax.Array      # [C]
+    deleted: jax.Array    # [C]
+    m: jax.Array          # scalar
+    dhits: jax.Array      # scalar
+    zl: jax.Array         # scalar int32
+    n_alloc: jax.Array    # scalar int32
+    size: jax.Array       # scalar int32
+
+    @property
+    def max_level(self) -> int:
+        return self.nxt.shape[0] - 1
+
+    @property
+    def capacity(self) -> int:
+        return self.key.shape[0]
+
+
+def make(capacity: int, max_level: int = 32,
+         count_dtype=jnp.int32, key_dtype=jnp.int32) -> SplayState:
+    """Empty splay-list. head/tail sentinels occupy slots 0/1."""
+    L = max_level
+    ml1 = L - 1
+    key = jnp.full((capacity,), POS_INF_32, dtype=key_dtype)
+    key = key.at[HEAD].set(NEG_INF_32)
+    nxt = jnp.full((L + 1, capacity), -1, dtype=jnp.int32)
+    # head materialized at [ML1, ML] only (lazy expansion applies to head!)
+    nxt = nxt.at[ml1, HEAD].set(TAIL)
+    nxt = nxt.at[L, HEAD].set(TAIL)
+    hits = jnp.zeros((L + 1, capacity), dtype=count_dtype)
+    selfhits = jnp.zeros((capacity,), dtype=count_dtype)
+    selfhits = selfhits.at[HEAD].set(1).at[TAIL].set(1)
+    top = jnp.zeros((capacity,), dtype=jnp.int32)
+    top = top.at[HEAD].set(L).at[TAIL].set(L)
+    nzero = jnp.full((capacity,), L, dtype=jnp.int32)
+    nzero = nzero.at[HEAD].set(ml1).at[TAIL].set(L)
+    deleted = jnp.zeros((capacity,), dtype=bool)
+    zero = jnp.array(0, dtype=count_dtype)
+    return SplayState(
+        key=key, nxt=nxt, hits=hits, selfhits=selfhits, top=top,
+        nzero=nzero, deleted=deleted, m=zero, dhits=zero,
+        zl=jnp.array(ml1, jnp.int32), n_alloc=jnp.array(2, jnp.int32),
+        size=jnp.array(0, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# primitive accessors
+# ---------------------------------------------------------------------------
+
+def _eff_next(st: SplayState, i, h):
+    """Successor of slot i at level h under lazy expansion."""
+    lvl = jnp.maximum(h, st.nzero[i])
+    return st.nxt[lvl, i]
+
+
+def _whits(st: SplayState, i, h):
+    """hits_i^h honouring lazy expansion (logical 0 below nzero)."""
+    return jnp.where(h >= st.nzero[i], st.hits[h, i],
+                     jnp.zeros((), st.hits.dtype))
+
+
+def _get_hits(st: SplayState, i, h):
+    """hits(C_i^h) = sh_i + hits_i^h."""
+    return st.selfhits[i] + _whits(st, i, h)
+
+
+def _fill_down(st: SplayState, i, h) -> SplayState:
+    """Materialize slot i's levels down to h (vectorized updateZeroLevel)."""
+    zl_i = st.nzero[i]
+    lvls = jnp.arange(st.nxt.shape[0])
+    mask = (lvls >= h) & (lvls < zl_i)
+    col_nxt = jnp.where(mask, st.nxt[zl_i, i], st.nxt[:, i])
+    col_hits = jnp.where(mask, 0, st.hits[:, i])
+    return st._replace(
+        nxt=st.nxt.at[:, i].set(col_nxt),
+        hits=st.hits.at[:, i].set(col_hits),
+        nzero=st.nzero.at[i].set(jnp.minimum(zl_i, h)))
+
+
+def _shift(x, e):
+    return jnp.right_shift(x, e.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# find — the lock-free search phase (pure)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=())
+def find(st: SplayState, k) -> Tuple[jax.Array, jax.Array]:
+    """Return (slot, steps): slot of the node with key k if physically
+    present else -1. Counts horizontal moves + level descents (the paper's
+    'average length of a path' metric)."""
+    ml1 = st.max_level - 1
+
+    def cond(c):
+        pred, h, steps, found = c
+        return (h >= st.zl) & (~found)
+
+    def body(c):
+        pred, h, steps, found = c
+        curr = _eff_next(st, pred, h)
+        adv = st.key[curr] <= k
+        pred2 = jnp.where(adv, curr, pred)
+        found2 = jnp.where(adv, found, st.key[pred] == k)
+        h2 = jnp.where(adv, h, h - 1)
+        return pred2, h2, steps + 1, found2
+
+    pred0 = jnp.array(HEAD, jnp.int32)
+    pred, h, steps, found = jax.lax.while_loop(
+        cond, body, (pred0, jnp.array(ml1, jnp.int32),
+                     jnp.array(0, jnp.int32), jnp.array(False)))
+    # found can also become true exactly at loop exit (descended past bottom)
+    found = found | (st.key[pred] == k)
+    slot = jnp.where(found & (pred != HEAD), pred, -1)
+    return slot.astype(jnp.int32), steps
+
+
+def find_batch(st: SplayState, ks) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized lock-free search for a batch of keys (read-only)."""
+    return jax.vmap(lambda k: find(st, k))(ks)
+
+
+# ---------------------------------------------------------------------------
+# the forward-pass update (counters + ascent/descent), Section 5
+# ---------------------------------------------------------------------------
+
+def _update(st: SplayState, k) -> SplayState:
+    """Forward-pass rebalance for a physically-present key k."""
+    L = st.max_level
+    ml1 = L - 1
+    one = jnp.ones((), st.m.dtype)
+    st = st._replace(m=st.m + one)
+    curr_m = st.m
+
+    def asc_sum(s, pp, curh):
+        return _whits(s, pp, curh + 1) - _whits(s, pp, curh)
+
+    def promote_cascade(s: SplayState, curr, pp):
+        """Promote curr up while the ascent condition holds."""
+        def cond(c):
+            s, curh, _ = c
+            ok = (curh + 1 < L) & (curh < s.top[pp])
+            thr = _shift(curr_m, ml1 - curh - 1)
+            return ok & (asc_sum(s, pp, curh) > thr)
+
+        def body(c):
+            s, curh, _ = c
+            s = _fill_down(s, pp, curh)
+            new_hits = s.hits[curh + 1, pp] - s.hits[curh, pp] - s.selfhits[curr]
+            s = s._replace(
+                top=s.top.at[curr].set(curh + 1),
+                hits=s.hits.at[curh + 1, curr].set(new_hits),
+                nxt=s.nxt.at[curh + 1, curr].set(s.nxt[curh + 1, pp]))
+            s = s._replace(
+                hits=s.hits.at[curh + 1, pp].set(s.hits[curh, pp]),
+                nxt=s.nxt.at[curh + 1, pp].set(curr))
+            return s, curh + 1, True
+
+        s, curh, promoted = jax.lax.while_loop(
+            cond, body, (s, s.top[curr], False))
+        return s, promoted
+
+    def demote(s: SplayState, curr, pred, h):
+        s = s._replace(zl=jnp.where(h == s.zl, s.zl - 1, s.zl))
+        s = _fill_down(s, curr, h - 1)
+        s = _fill_down(s, pred, h - 1)
+        gh_curr = s.selfhits[curr] + s.hits[h, curr]
+        s = s._replace(
+            hits=s.hits.at[h, pred].add(gh_curr).at[h, curr].set(0))
+        s = s._replace(
+            nxt=s.nxt.at[h, pred].set(s.nxt[h, curr]).at[h, curr].set(-1),
+            top=s.top.at[curr].set(h - 1))
+        return s
+
+    def body(c):
+        s, h, pred, pp, found, done, scanned = c
+        curr = _eff_next(s, pred, h)
+        gt = s.key[curr] > k
+
+        # ---- branch A: end of scan at this level -------------------------
+        # Two sub-cases, mirroring the oracle's control flow exactly:
+        #   * level entry (nothing scanned yet): pred is the parent of k at
+        #     this level -> increment its subtree counter;
+        #   * scan exit (something scanned): the parent was already counted
+        #     inside the scan via is_parent -> descend with no increment.
+        def branch_a(s):
+            def incr(s):
+                s = _fill_down(s, pred, h)
+                s = s._replace(hits=s.hits.at[h, pred].add(one))
+                return s
+            s = jax.lax.cond(found | scanned, lambda s: s, incr, s)
+            return s, h - 1, pred, pred, found, found, jnp.array(False)
+
+        # ---- branch B: process curr --------------------------------------
+        def branch_b(s):
+            nxt_key = s.key[_eff_next(s, curr, h)]
+            is_parent = nxt_key > k
+            is_target = s.key[curr] == k
+
+            def hit_self(s):
+                return s._replace(selfhits=s.selfhits.at[curr].add(one))
+
+            def hit_sub(s):
+                s = _fill_down(s, curr, h)
+                return s._replace(hits=s.hits.at[h, curr].add(one))
+
+            s = jax.lax.cond(is_parent & is_target, hit_self, lambda s: s, s)
+            s = jax.lax.cond(is_parent & ~is_target, hit_sub, lambda s: s, s)
+            new_found = found | (is_parent & is_target)
+
+            s, promoted = promote_cascade(s, curr, pp)
+
+            def after_promo(s):
+                return s, h, curr, curr, new_found, jnp.array(False), \
+                    jnp.array(True)
+
+            def after_no_promo(s):
+                nk = s.key[_eff_next(s, curr, h)]
+                thr = _shift(curr_m, ml1 - h)
+                desc = ((s.top[curr] == h) & (nk <= k) &
+                        (_get_hits(s, curr, h) + _get_hits(s, pred, h) <= thr))
+                s = jax.lax.cond(
+                    desc, lambda s: demote(s, curr, pred, h), lambda s: s, s)
+                pred2 = jnp.where(desc, pred, curr)
+                return s, h, pred2, pp, new_found, jnp.array(False), \
+                    jnp.array(True)
+
+            return jax.lax.cond(promoted, after_promo, after_no_promo, s)
+
+        return jax.lax.cond(gt, branch_a, branch_b, s)
+
+    def cond(c):
+        s, h, pred, pp, found, done, scanned = c
+        return (~done) & (h >= s.zl)
+
+    init = (st, jnp.array(ml1, jnp.int32), jnp.array(HEAD, jnp.int32),
+            jnp.array(HEAD, jnp.int32), jnp.array(False), jnp.array(False),
+            jnp.array(False))
+    st, *_ = jax.lax.while_loop(cond, body, init)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# physical insert at the bottom level
+# ---------------------------------------------------------------------------
+
+def _link_bottom(st: SplayState, k) -> SplayState:
+    zl = st.zl
+    ml1 = st.max_level - 1
+
+    def cond(c):
+        pred, h = c
+        return h >= zl
+
+    def body(c):
+        pred, h = c
+        curr = _eff_next(st, pred, h)
+        adv = st.key[curr] <= k
+        return jnp.where(adv, curr, pred), jnp.where(adv, h, h - 1)
+
+    pred, _ = jax.lax.while_loop(
+        cond, body, (jnp.array(HEAD, jnp.int32), jnp.array(ml1, jnp.int32)))
+    st = _fill_down(st, pred, zl)
+    j = st.n_alloc
+    st = st._replace(
+        key=st.key.at[j].set(k.astype(st.key.dtype)),
+        nxt=st.nxt.at[zl, j].set(st.nxt[zl, pred]).at[zl, pred].set(j),
+        top=st.top.at[j].set(zl),
+        nzero=st.nzero.at[j].set(zl),
+        selfhits=st.selfhits.at[j].set(0),
+        deleted=st.deleted.at[j].set(False),
+        n_alloc=st.n_alloc + 1)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# public operations.  `upd` is the pre-sampled Bernoulli(p) coin for the
+# relaxed rebalancing of Section 4 (pass True for the exact algorithm).
+# ---------------------------------------------------------------------------
+
+def contains(st: SplayState, k, upd) -> Tuple[SplayState, jax.Array, jax.Array]:
+    slot, steps = find(st, k)
+    present = slot >= 0
+    live = present & ~st.deleted[jnp.maximum(slot, 0)]
+    one = jnp.ones((), st.m.dtype)
+
+    def do_upd(s):
+        s = _update(s, k)
+        # hit on a marked node counts toward deleted hits
+        s = s._replace(dhits=jnp.where(present & ~live, s.dhits + one, s.dhits))
+        return s
+
+    st = jax.lax.cond(present & upd, do_upd, lambda s: s, st)
+    st = _maybe_rebuild(st)
+    return st, live, steps
+
+
+def insert(st: SplayState, k, upd) -> Tuple[SplayState, jax.Array, jax.Array]:
+    slot, steps = find(st, k)
+    present = slot >= 0
+    slot_c = jnp.maximum(slot, 0)
+    marked = present & st.deleted[slot_c]
+
+    def case_revive(s):  # unmark + unconditional rebalance
+        s = s._replace(
+            deleted=s.deleted.at[slot_c].set(False),
+            dhits=s.dhits - s.selfhits[slot_c],
+            size=s.size + 1)
+        return _update(s, k)
+
+    def case_exists(s):  # unsuccessful insert: relaxed visit
+        return jax.lax.cond(upd, lambda x: _update(x, k), lambda x: x, s)
+
+    def case_new(s):
+        s = _link_bottom(s, k)
+        s = s._replace(size=s.size + 1)
+        return _update(s, k)
+
+    st = jax.lax.cond(
+        marked, case_revive,
+        lambda s: jax.lax.cond(present, case_exists, case_new, s), st)
+    return st, ~present | marked, steps
+
+
+def delete(st: SplayState, k, upd) -> Tuple[SplayState, jax.Array, jax.Array]:
+    slot, steps = find(st, k)
+    present = slot >= 0
+    slot_c = jnp.maximum(slot, 0)
+    marked = present & st.deleted[slot_c]
+    success = present & ~marked
+    one = jnp.ones((), st.m.dtype)
+
+    def case_success(s):
+        s = s._replace(deleted=s.deleted.at[slot_c].set(True),
+                       size=s.size - 1)
+        s = _update(s, k)
+        s = s._replace(dhits=s.dhits + s.selfhits[slot_c])
+        return s
+
+    def case_marked(s):  # unsuccessful delete on marked node: relaxed visit
+        def u(x):
+            x = _update(x, k)
+            return x._replace(dhits=x.dhits + one)
+        return jax.lax.cond(upd, u, lambda x: x, s)
+
+    st = jax.lax.cond(
+        success, case_success,
+        lambda s: jax.lax.cond(marked, case_marked, lambda x: x, s), st)
+    st = _maybe_rebuild(st)
+    return st, success, steps
+
+
+# ---------------------------------------------------------------------------
+# rebuild (Section 2.2 "Efficient Rebuild") — JAX-native, vectorized.
+# The paper's recursion is unrolled level-by-level: at relative level r
+# (top-down) every segment whose hit total H satisfies bit_length(H)-1 == r
+# splits at its weighted median (the middle cell of the virtual array T).
+# ---------------------------------------------------------------------------
+
+def _maybe_rebuild(st: SplayState) -> SplayState:
+    trig = (st.m > 0) & (2 * st.dhits >= st.m)
+    return jax.lax.cond(trig, rebuild, lambda s: s, st)
+
+
+def rebuild(st: SplayState) -> SplayState:
+    C = st.capacity
+    L = st.max_level
+    ml1 = L - 1
+    cnt_dt = st.hits.dtype
+
+    # gather alive nodes in key order
+    is_node = (jnp.arange(C) >= 2) & (jnp.arange(C) < st.n_alloc)
+    alive = is_node & ~st.deleted & (st.key < POS_INF_32)
+    sort_key = jnp.where(alive, st.key, POS_INF_32)
+    order = jnp.argsort(sort_key)                      # alive first, by key
+    keys_s = st.key[order]
+    sh_s = jnp.where(alive[order], st.selfhits[order], 0)
+    alive_s = alive[order]
+    n = jnp.sum(alive_s.astype(jnp.int32))
+
+    big_m = jnp.sum(sh_s)
+
+    def bitlen(x):
+        """number of bits of x (0 -> 0); exact integer floor(log2)+1."""
+        def body(i, o):
+            return jnp.where(_shift(x, i) > 0, i + 1, o)
+        return jax.lax.fori_loop(0, 8 * x.dtype.itemsize - 1, body,
+                                 jnp.zeros((), jnp.int32))
+
+    k_new = jnp.maximum(bitlen(big_m) - 1, 0)
+    k_new = jnp.minimum(k_new, ml1)
+    zl_new = ml1 - k_new
+
+    pref = jnp.cumsum(sh_s)                            # inclusive prefix
+    pref0 = jnp.concatenate([jnp.zeros((1,), cnt_dt), pref[:-1]])
+
+    # heights: rel height per sorted position, assigned top-down
+    rel = jnp.full((C,), -1, jnp.int32)                # -1 = unassigned → 0
+    idx = jnp.arange(C)
+
+    def level_body(r_rev, rel):
+        r = k_new - r_rev                              # from k_new down to 0
+        # boundaries: positions already assigned height > r
+        bnd = rel > r
+        # segment start prefix value: max over j<=i of (bnd? pref[j] : 0)
+        start_w = jax.lax.associative_scan(
+            jnp.maximum, jnp.where(bnd, pref, jnp.zeros_like(pref)))
+        # shift right: segment of i starts after the last boundary strictly
+        # before i
+        start_w = jnp.concatenate(
+            [jnp.zeros((1,), cnt_dt), start_w[:-1]])
+        # segment end prefix value: min over j>=i of (bnd? pref0[j] : M)
+        end_base = jnp.where(bnd, pref0, jnp.full_like(pref0, big_m))
+        end_w = jax.lax.associative_scan(
+            jnp.minimum, end_base, reverse=True)
+        end_w = jnp.concatenate([end_w[1:], jnp.full((1,), big_m, cnt_dt)])
+        seg_h = end_w - start_w
+        fires = (~bnd) & alive_s & (rel < 0) & (
+            seg_h >= (jnp.ones((), cnt_dt) << r.astype(cnt_dt)))
+        # weighted median: first position with pref - start_w >= ceil(H/2)
+        pos = (seg_h + 1) // 2
+        reach = (pref - start_w) >= pos
+        reach_prev = (pref0 - start_w) >= pos
+        is_median = fires & reach & ~reach_prev
+        return jnp.where(is_median, r, rel)
+
+    rel = jax.lax.fori_loop(0, k_new + 1, level_body, rel)
+    rel = jnp.where(alive_s, jnp.maximum(rel, 0), -1)
+    top_new = jnp.where(alive_s, zl_new + rel, 0)
+
+    # fresh layout: alive nodes occupy slots 2..2+n in key order
+    slot_of_pos = jnp.where(alive_s, idx + 2, 0).astype(jnp.int32)
+
+    # dead writes routed out of bounds and dropped
+    dst = jnp.where(alive_s, slot_of_pos, C).astype(jnp.int32)
+
+    new_key = jnp.full((C,), POS_INF_32, st.key.dtype)
+    new_key = new_key.at[HEAD].set(NEG_INF_32)
+    new_key = new_key.at[dst].set(keys_s, mode="drop")
+
+    new_sh = jnp.zeros((C,), cnt_dt)
+    new_sh = new_sh.at[dst].set(sh_s, mode="drop")
+    new_sh = new_sh.at[HEAD].set(1).at[TAIL].set(1)
+
+    new_top = jnp.zeros((C,), jnp.int32)
+    new_top = new_top.at[dst].set(top_new, mode="drop")
+    new_top = new_top.at[HEAD].set(L).at[TAIL].set(L)
+
+    new_nzero = jnp.full((C,), L, jnp.int32)
+    new_nzero = new_nzero.at[dst].set(
+        jnp.full((C,), 1, jnp.int32) * zl_new, mode="drop")
+    new_nzero = new_nzero.at[HEAD].set(zl_new).at[TAIL].set(L)
+
+    # per-level links + interval-sum hit counters
+    lvls = jnp.arange(L + 1, dtype=jnp.int32)[:, None]          # [L+1, 1]
+    at_lvl = alive_s[None, :] & (top_new[None, :] >= lvls)      # [L+1, C]
+    # next alive position at this level, scanning right-to-left
+    pos_or_inf = jnp.where(at_lvl, idx[None, :], C + 7)
+    nxt_pos = jax.lax.associative_scan(
+        jnp.minimum, pos_or_inf, reverse=True, axis=1)
+    nxt_pos_excl = jnp.concatenate(
+        [nxt_pos[:, 1:], jnp.full((L + 1, 1), C + 7)], axis=1)
+    # successor slot (tail if none)
+    succ_slot = jnp.where(
+        nxt_pos_excl <= C - 1,
+        jnp.take(slot_of_pos, jnp.minimum(nxt_pos_excl, C - 1)),
+        TAIL).astype(jnp.int32)
+    # interval sum (this, succ): pref0[succ_pos] - pref[this]
+    succ_pref0 = jnp.where(
+        nxt_pos_excl <= C - 1,
+        jnp.take(pref0, jnp.minimum(nxt_pos_excl, C - 1)), big_m)
+    seg_hits = (succ_pref0 - pref[None, :]).astype(cnt_dt)
+
+    write_mask = at_lvl & (lvls >= zl_new)
+    dst2 = jnp.where(write_mask, slot_of_pos[None, :], C).astype(jnp.int32)
+    lvl_idx = jnp.broadcast_to(lvls, (L + 1, C))
+    new_nxt = jnp.full((L + 1, C), -1, jnp.int32)
+    new_nxt = new_nxt.at[lvl_idx, dst2].set(succ_slot, mode="drop")
+    new_hits = jnp.zeros((L + 1, C), cnt_dt)
+    new_hits = new_hits.at[lvl_idx, dst2].set(seg_hits, mode="drop")
+
+    # head links: first alive position at each level (or tail)
+    first_pos = nxt_pos[:, 0]
+    head_succ = jnp.where(
+        first_pos <= C - 1,
+        jnp.take(slot_of_pos, jnp.minimum(first_pos, C - 1)),
+        TAIL).astype(jnp.int32)
+    head_hits = jnp.where(
+        first_pos <= C - 1,
+        jnp.take(pref0, jnp.minimum(first_pos, C - 1)), big_m).astype(cnt_dt)
+    head_lvl_mask = (lvls[:, 0] >= zl_new) & (lvls[:, 0] <= ml1)
+    new_nxt = new_nxt.at[:, HEAD].set(
+        jnp.where(head_lvl_mask, head_succ, -1))
+    new_nxt = new_nxt.at[L, HEAD].set(TAIL)
+    new_hits = new_hits.at[:, HEAD].set(jnp.where(head_lvl_mask, head_hits, 0))
+
+    # clean slots: deleted=False everywhere, parked slot C-1 reset
+    new_deleted = jnp.zeros((C,), bool)
+
+    return SplayState(
+        key=new_key, nxt=new_nxt, hits=new_hits, selfhits=new_sh,
+        top=new_top, nzero=new_nzero, deleted=new_deleted,
+        m=big_m, dhits=jnp.zeros((), cnt_dt),
+        zl=zl_new.astype(jnp.int32), n_alloc=(n + 2).astype(jnp.int32),
+        size=n.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# operation-stream driver (the benchmark engine)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def run_ops(st: SplayState, kinds, keys, upd_mask):
+    """Apply a stream of operations (scan; lax.switch per op kind).
+    Returns final state plus per-op (result, path_len)."""
+
+    def step(s, op):
+        kind, k, u = op
+        s_out, res, plen = jax.lax.switch(
+            kind,
+            [lambda a: contains(a[0], a[1], a[2]),
+             lambda a: insert(a[0], a[1], a[2]),
+             lambda a: delete(a[0], a[1], a[2])],
+            (s, k, u))
+        return s_out, (res, plen)
+
+    st, (res, plen) = jax.lax.scan(step, st, (kinds, keys, upd_mask))
+    return st, res, plen
+
+
+@jax.jit
+def run_contains_batch(st: SplayState, keys, upd_mask):
+    """The concurrent-execution analogue (DESIGN.md §2): a batch of B
+    lock-free searches evaluated in parallel (vmap) against the state
+    snapshot, followed by the serialized update fold for the subsampled
+    updaters (hand-over-hand locking guarantees exactly this total order
+    in the C++ version).  Rebuild is deferred to the batch boundary so
+    marked-but-visited keys stay physically present for the whole batch.
+    Returns (state, results[B], steps[B])."""
+    slots, steps = find_batch(st, keys)
+    present = slots >= 0
+    marked = present & st.deleted[jnp.maximum(slots, 0)]
+    one = jnp.ones((), st.m.dtype)
+
+    def upd_step(s, op):
+        k, do, pres, mk = op
+
+        def u(x):
+            x = _update(x, k)
+            return x._replace(dhits=jnp.where(mk, x.dhits + one, x.dhits))
+
+        s = jax.lax.cond(do & pres, u, lambda x: x, s)
+        return s, ()
+
+    st, _ = jax.lax.scan(upd_step, st, (keys, upd_mask, present, marked))
+    st = _maybe_rebuild(st)
+    return st, present & ~marked, steps
+
+
+# ---------------------------------------------------------------------------
+# host-side introspection (tests / stats)
+# ---------------------------------------------------------------------------
+
+def to_numpy(st: SplayState) -> dict:
+    return {f: np.asarray(getattr(st, f)) for f in st._fields}
+
+
+def heights(st: SplayState) -> dict:
+    """key -> relative height, walking the bottom list on host."""
+    s = to_numpy(st)
+    out = {}
+    zl = int(s["zl"])
+    L = st.max_level
+
+    def eff_next(i, h):
+        lvl = max(h, int(s["nzero"][i]))
+        return int(s["nxt"][lvl, i])
+
+    i = eff_next(HEAD, zl)
+    while i != TAIL and i >= 0:
+        out[int(s["key"][i])] = int(s["top"][i]) - zl
+        i = eff_next(i, zl)
+    return out

@@ -1,0 +1,118 @@
+"""Workload generators for the paper's experiments (Section 6, Appendix C).
+
+A family ``n-x-y`` reads: given n keys, x% of the contains go to y% of the
+keys.  The general family ``n-r-x-y-s`` (C.3) adds insert/delete traffic.
+All generators return numpy arrays ready for either engine (Python oracle,
+JAX run_ops, batched driver).  The same Zipf sampler feeds the LM data
+pipeline (train/data.py) — token frequencies and key accesses are the same
+skew phenomenon (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+OP_CONTAINS = 0
+OP_INSERT = 1
+OP_DELETE = 2
+
+
+class OpStream(NamedTuple):
+    kinds: np.ndarray   # int32[T]
+    keys: np.ndarray    # int32[T]
+    upd: np.ndarray     # bool[T]   pre-sampled Bernoulli(p) balancing coins
+    populate: np.ndarray  # int32[n] keys to insert before timing
+
+
+def _coins(rng: np.random.Generator, t: int, p: float) -> np.ndarray:
+    if p >= 1.0:
+        return np.ones(t, dtype=bool)
+    return rng.random(t) < p
+
+
+def xy_workload(n: int, x: float, y: float, ops: int, p: float = 1.0,
+                seed: int = 0, key_space: Optional[int] = None) -> OpStream:
+    """n-x-y read-only workload: x-fraction of contains hit the popular set
+    S (|S| = y*n), the rest hit the complement uniformly."""
+    rng = np.random.default_rng(seed)
+    key_space = key_space or n
+    keys_all = rng.permutation(key_space)[:n].astype(np.int32)
+    n_pop = max(int(round(y * n)), 1)
+    popular = keys_all[:n_pop]
+    rest = keys_all[n_pop:] if n_pop < n else keys_all
+    take_pop = rng.random(ops) < x
+    k_pop = popular[rng.integers(0, len(popular), ops)]
+    k_rest = rest[rng.integers(0, len(rest), ops)]
+    keys = np.where(take_pop, k_pop, k_rest).astype(np.int32)
+    return OpStream(
+        kinds=np.zeros(ops, np.int32), keys=keys,
+        upd=_coins(rng, ops, p), populate=np.sort(keys_all))
+
+
+def uniform_workload(n: int, ops: int, p: float = 1.0, seed: int = 0
+                     ) -> OpStream:
+    """The 1e5-100-100 uniform workload (Figure 11)."""
+    rng = np.random.default_rng(seed)
+    keys_all = np.arange(n, dtype=np.int32)
+    keys = rng.integers(0, n, ops).astype(np.int32)
+    return OpStream(np.zeros(ops, np.int32), keys, _coins(rng, ops, p),
+                    keys_all)
+
+
+def zipf_workload(n: int, ops: int, s: float = 1.0, p: float = 1.0,
+                  seed: int = 0) -> OpStream:
+    """Bounded Zipf(s) over n keys (Figure 12; s=1 is the paper's setting).
+    Key identities are randomly permuted so rank does not equal key order."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    probs = ranks ** (-s)
+    probs /= probs.sum()
+    perm = rng.permutation(n).astype(np.int32)
+    draws = rng.choice(n, size=ops, p=probs)
+    keys = perm[draws].astype(np.int32)
+    return OpStream(np.zeros(ops, np.int32), keys, _coins(rng, ops, p),
+                    np.sort(perm))
+
+
+def general_workload(n: int, r: float, x: float, y: float, s: float,
+                     ops: int, p: float = 1.0, seed: int = 0) -> OpStream:
+    """n-r-x-y-s general workload (Appendix C.3):
+      r%:   contains; the rest split evenly insert/delete;
+      x% of contains target y% of keys (the popular set R);
+      insert/delete draw uniformly from an s-fraction key set W.
+    Keys are pre-populated with probability 90% each (paper's setup)."""
+    rng = np.random.default_rng(seed)
+    keys_all = rng.permutation(2 * n)[:n].astype(np.int32)
+    populate = np.sort(keys_all[rng.random(n) < 0.9])
+    n_r = max(int(round(y * n)), 1)
+    set_r = keys_all[:n_r]
+    rest = keys_all[n_r:] if n_r < n else keys_all
+    n_w = max(int(round(s * n)), 1)
+    set_w = rng.permutation(keys_all)[:n_w]
+
+    u = rng.random(ops)
+    kinds = np.where(u < r, OP_CONTAINS,
+                     np.where(u < r + (1 - r) / 2, OP_INSERT, OP_DELETE)
+                     ).astype(np.int32)
+    take_pop = rng.random(ops) < x
+    k_pop = set_r[rng.integers(0, len(set_r), ops)]
+    k_rest = rest[rng.integers(0, len(rest), ops)]
+    k_reads = np.where(take_pop, k_pop, k_rest)
+    k_writes = set_w[rng.integers(0, len(set_w), ops)]
+    keys = np.where(kinds == OP_CONTAINS, k_reads, k_writes).astype(np.int32)
+    return OpStream(kinds, keys, _coins(rng, ops, p), populate)
+
+
+def zipf_token_ids(rng: np.random.Generator, vocab: int, shape,
+                   s: float = 1.0) -> np.ndarray:
+    """Zipf-distributed token ids for the LM data pipeline (shares the
+    sampler with zipf_workload; vocabularies are Zipf-distributed, which is
+    exactly the skew the splay-list exploits)."""
+    v = min(vocab, 1 << 17)   # cap the support for sampling efficiency
+    ranks = np.arange(1, v + 1, dtype=np.float64)
+    probs = ranks ** (-s)
+    probs /= probs.sum()
+    draws = rng.choice(v, size=int(np.prod(shape)), p=probs)
+    return draws.reshape(shape).astype(np.int32)

@@ -1,0 +1,82 @@
+"""Pallas TPU kernels: splay-tiered embedding gather.
+
+The splay heights stratify the vocabulary by access frequency (height >=
+h*  <=>  freq >= m/2^(k-h*)), giving a provably-calibrated hot set.  The
+embedding lookup becomes two row-gathers with different residency:
+
+  * gather_rows over the HOT BUFFER — the whole buffer is one VMEM block
+    (constant index_map), so hot lookups never touch HBM;
+  * gather_rows over the full table — one HBM row tile per id, streamed
+    by a scalar-prefetch index_map (the id vector is grid-prefetched, so
+    the DMA for row ids[i] issues before iteration i runs).
+
+ops.hot_gather composes them: partition ids by hotness, run both gathers,
+scatter-merge.  Validated against ref.hot_gather_ref in interpret mode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(ids_ref, row_ref, out_ref):
+    # ids_ref is the scalar-prefetch operand (used by the index_map);
+    # the block fed to us is already table[ids[i]].
+    out_ref[...] = row_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(table, ids, interpret: bool = True):
+    """out[i] = table[ids[i]] — one grid step per id; the row is selected
+    by the scalar-prefetch index_map (no in-kernel dynamic gather)."""
+    n, d = table.shape
+    (q,) = ids.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids: (ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((q, d), table.dtype),
+        interpret=interpret,
+    )(ids, table)
+
+
+def _hot_kernel(ids_ref, buf_ref, out_ref):
+    """Whole hot buffer is VMEM-resident; per-id row select in-kernel."""
+    i = pl.program_id(0)
+    idx = ids_ref[i]
+    out_ref[...] = buf_ref[idx, :][None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_hot(hot_buf, ranks, interpret: bool = True):
+    """out[i] = hot_buf[ranks[i]] with hot_buf fully VMEM-resident
+    (constant index_map: the buffer block never re-streams)."""
+    h, d = hot_buf.shape
+    (q,) = ranks.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q,),
+        in_specs=[
+            pl.BlockSpec((h, d), lambda i, ids: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids: (i, 0)),
+    )
+    return pl.pallas_call(
+        _hot_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((q, d), hot_buf.dtype),
+        interpret=interpret,
+    )(ranks, hot_buf)

@@ -1,0 +1,40 @@
+"""Jitted wrappers over the Pallas kernels (interpret on CPU, compiled on
+TPU) + the composed two-tier hot_gather."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import hot_gather as hg
+from repro.kernels import splay_search as ssk
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def splay_search(level_keys, queries, query_block: int = 256):
+    """Batched level-array search (see kernels/splay_search.py)."""
+    pad = (-queries.shape[0]) % query_block
+    q = jnp.pad(queries, (0, pad), constant_values=ssk.PAD_KEY - 1)
+    found, rank, lvl = ssk.splay_search(
+        level_keys, q, query_block=query_block, interpret=not on_tpu())
+    n = queries.shape[0]
+    return found[:n], rank[:n], lvl[:n]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def hot_gather(table, hot_buf, hot_rank, ids):
+    """Two-tier gather: out[i] = hot_buf[hot_rank[ids[i]]] if hot else
+    table[ids[i]].  Hot ids hit the VMEM-resident buffer; only cold ids
+    stream HBM rows."""
+    r = hot_rank[ids]
+    is_hot = r >= 0
+    hot_out = hg.gather_hot(hot_buf, jnp.maximum(r, 0),
+                            interpret=not on_tpu())
+    cold_out = hg.gather_rows(table, jnp.where(is_hot, 0, ids),
+                              interpret=not on_tpu())
+    return jnp.where(is_hot[:, None], hot_out, cold_out)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def splay_search_ref(level_keys, queries):
+    """Oracle for the batched level-array search.
+
+    level_keys: int32 [n_levels, width] (+INF padded, each row sorted,
+                rows nested: row r+1 contains row r's keys).
+    queries:    int32 [q].
+
+    Returns (found [q] bool, rank [q] int32, level_found [q] int32):
+      rank       — predecessor index in the bottom row (count of keys <= q
+                   minus 1; -1 if q below the smallest key);
+      level_found — first row index containing the key, n_levels if absent
+                   (the kernel's access-cost metric, the path-length
+                   analogue).
+    """
+    n_levels = level_keys.shape[0]
+    bottom = level_keys[-1]
+    rank = jnp.sum(bottom[None, :] <= queries[:, None], axis=1) - 1
+    hit = (level_keys[:, None, :] == queries[None, :, None]).any(axis=2)
+    # first level (row) where the key appears
+    level_found = jnp.where(
+        hit.any(axis=0),
+        jnp.argmax(hit, axis=0),
+        jnp.full(queries.shape, n_levels, jnp.int32)).astype(jnp.int32)
+    found = hit.any(axis=0)
+    return found, rank.astype(jnp.int32), level_found
+
+
+def gather_rows_ref(table, ids):
+    """Oracle for the row-gather kernel: out[i] = table[ids[i]]."""
+    return table[ids]
+
+
+def hot_gather_ref(table, hot_buf, hot_rank, ids):
+    """Oracle for the two-tier gather: rows with hot_rank >= 0 come from
+    the (VMEM-resident) hot buffer, the rest from the HBM table."""
+    r = hot_rank[ids]
+    hot = r >= 0
+    return jnp.where(hot[:, None],
+                     hot_buf[jnp.maximum(r, 0)],
+                     table[ids])

@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: batched splay-list search over level arrays.
+
+TPU adaptation of the paper's search phase (DESIGN.md §5): instead of
+pointer chasing, each splay level is a dense sorted row; a query block
+compares against rows top-down (row 0 = hottest).  Two properties carry
+the splay-list's distribution-adaptivity to the TPU:
+
+  * hot keys resolve in the first (tiny, VMEM-resident) rows — the
+    short-access-path property;
+  * once every query in the block has resolved, remaining (wide, cold)
+    rows are skipped entirely via @pl.when — whole HBM tiles never move,
+    the memory-traffic analogue of not walking the cold list.
+
+Grid: (query_blocks,).  BlockSpecs: queries tiled [QB]; the level matrix
+is tiled per level row [1, width] so only touched rows stream into VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PAD_KEY = 2 ** 31 - 1
+DEFAULT_QUERY_BLOCK = 256
+
+
+def _kernel(q_ref, lv_ref, found_ref, rank_ref, level_ref, *,
+            n_levels: int):
+    q = q_ref[...]                                    # [QB]
+    qb = q.shape[0]
+    found = jnp.zeros((qb,), jnp.bool_)
+    level_found = jnp.full((qb,), n_levels, jnp.int32)
+    rank = jnp.zeros((qb,), jnp.int32)
+
+    def body(r, carry):
+        found, level_found, rank = carry
+        all_resolved = jnp.all(found)
+        is_bottom = r == n_levels - 1
+
+        # Skip whole cold rows when every query already resolved — except
+        # the bottom row, which must still produce the predecessor rank
+        # (needed by insert/value lookup).
+        def do_row():
+            row = lv_ref[r, :]                        # [width] in VMEM
+            le = row[None, :] <= q[:, None]           # [QB, width] compare
+            cnt = jnp.sum(le, axis=1).astype(jnp.int32)
+            # membership: the predecessor equals q
+            idx = jnp.maximum(cnt - 1, 0)
+            pred = jnp.take(row, idx)
+            hit = (cnt > 0) & (pred == q)
+            return cnt - 1, hit
+
+        def skip_row():
+            return (jnp.zeros((qb,), jnp.int32),
+                    jnp.zeros((qb,), jnp.bool_))
+
+        run = (~all_resolved) | is_bottom
+        r_rank, hit = jax.lax.cond(run, do_row, skip_row)
+        newly = hit & ~found
+        level_found = jnp.where(newly, r, level_found)
+        found = found | hit
+        rank = jnp.where(is_bottom, r_rank, rank)
+        return found, level_found, rank
+
+    found, level_found, rank = jax.lax.fori_loop(
+        0, n_levels, body, (found, level_found, rank))
+    found_ref[...] = found
+    rank_ref[...] = rank
+    level_ref[...] = level_found
+
+
+@functools.partial(jax.jit, static_argnames=("query_block", "interpret"))
+def splay_search(level_keys, queries, query_block: int =
+                 DEFAULT_QUERY_BLOCK, interpret: bool = True):
+    """Batched search.  level_keys int32 [n_levels, width] (sorted rows,
+    +INF padded, nested); queries int32 [q] (q % query_block == 0).
+    Returns (found [q] bool, rank [q] int32, level_found [q] int32)."""
+    n_levels, width = level_keys.shape
+    nq = queries.shape[0]
+    assert nq % query_block == 0, (nq, query_block)
+    grid = (nq // query_block,)
+
+    kernel = functools.partial(_kernel, n_levels=n_levels)
+    out_shapes = (
+        jax.ShapeDtypeStruct((nq,), jnp.bool_),
+        jax.ShapeDtypeStruct((nq,), jnp.int32),
+        jax.ShapeDtypeStruct((nq,), jnp.int32),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((query_block,), lambda i: (i,)),
+            pl.BlockSpec((n_levels, width), lambda i: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((query_block,), lambda i: (i,)),
+            pl.BlockSpec((query_block,), lambda i: (i,)),
+            pl.BlockSpec((query_block,), lambda i: (i,)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(queries, level_keys)

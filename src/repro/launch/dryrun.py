@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract the roofline terms.
+
+The two lines above MUST stay first (before any jax-importing code): jax
+locks the device count on first init, and only the dry-run should see 512
+placeholder devices — smoke tests and benches see 1 (the flag is set here,
+not globally).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k \
+      --mesh single --out experiments/dryrun
+  python -m repro.launch.dryrun --list-cells
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import registry                    # noqa: E402
+from repro.configs.base import SHAPES                 # noqa: E402
+from repro.launch.mesh import make_production_mesh    # noqa: E402
+from repro.launch import roofline as rf               # noqa: E402
+from repro.models import model_zoo as zoo             # noqa: E402
+from repro.models.layers import axes_to_specs         # noqa: E402
+from repro.parallel import sharding as shd            # noqa: E402
+from repro.serve import serve_step as ss              # noqa: E402
+from repro.train import train_step as ts              # noqa: E402
+from repro.train import optimizer as opt              # noqa: E402
+
+
+def cells():
+    """All runnable (arch, shape) pairs; skips recorded in DESIGN.md §6."""
+    out = []
+    for arch, cfg in registry.ARCHS.items():
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            if shape == "long_500k" and not registry.sub_quadratic(cfg):
+                continue   # quadratic-attention skip (documented)
+            out.append((arch, shape))
+    return out
+
+
+def _spec_tree(tree_axes, shapes_tree, mesh, rules):
+    return axes_to_specs(shapes_tree, tree_axes, mesh, rules)
+
+
+def _probe_cfg(cfg, n_layers: int):
+    """Unrolled reduced-depth variant for the exact-cost probes: every
+    loop (layer scan, attention kv-chunk scan, SSD inter-chunk scan)
+    unrolled, so cost_analysis sees all iterations; same widths and
+    sharding as the full config."""
+    import dataclasses
+    return dataclasses.replace(
+        cfg, n_layers=n_layers, scan_layers=False,
+        n_enc_layers=(n_layers if cfg.n_enc_layers else 0))
+
+
+def probe_unit(cfg) -> int:
+    """Layer-extrapolation unit: hybrid archs repeat in attn_every groups."""
+    return cfg.attn_every if (cfg.family == "hybrid" and cfg.attn_every) \
+        else 1
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               microbatch: int = 1, fsdp: bool = True,
+               remat: str = "block", compress=None, kv_dtype=None,
+               param_dtype=None, probe_layers=None, seq_override=None,
+               batch_override=None):
+    """Returns (lowered, meta) for one cell."""
+    import dataclasses
+    cfg = registry.get(arch)
+    if remat != cfg.remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+    if param_dtype:
+        cfg = dataclasses.replace(cfg, param_dtype=param_dtype)
+    if probe_layers is not None:
+        cfg = _probe_cfg(cfg, probe_layers)
+    shape = SHAPES[shape_name]
+    if seq_override or batch_override:
+        shape = dataclasses.replace(
+            shape, seq_len=seq_override or shape.seq_len,
+            global_batch=batch_override or shape.global_batch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    seq_sharded = shape.global_batch < mesh.shape["data"]
+    rules = shd.default_rules(multi_pod=multi_pod, seq_sharded=seq_sharded,
+                              fsdp=fsdp)
+    if shape.kind == "decode" and not seq_sharded and cfg.n_kv and \
+            cfg.n_kv % mesh.shape["model"] != 0:
+        # flash-decoding layout: kv heads cannot shard -> shard the cache
+        # sequence over the model axis instead (§Perf iteration C1)
+        rules["kvseq"] = ("model",)
+    if shape.kind in ("train", "prefill") and \
+            shape.seq_len % mesh.shape["model"] == 0:
+        # Megatron-SP: the residual stream lives sequence-sharded over
+        # `model`; layer boundaries become bf16 all-gather/reduce-scatter
+        # pairs instead of f32 all-reduces (§Perf iter B2)
+        rules["cp_seq"] = ("model",)
+        if cfg.n_heads and cfg.n_heads % mesh.shape["model"] != 0:
+            # context-parallel attention: heads cannot shard over `model`
+            # (qwen2's 14, whisper's 20) -> shard the q-sequence axis
+            # there instead; kv chunks stream replicated (§Perf iter A1)
+            rules["cp_q"] = ("model",)
+    params_avals, p_axes = zoo.build_params(cfg, abstract=True)
+    p_specs = axes_to_specs(params_avals, p_axes, mesh, rules)
+    p_shardings = jax.tree.map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), p_specs)
+
+    with shd.use_mesh(mesh, rules):
+        if shape.kind == "train":
+            batch_avals = ts.input_specs(cfg, shape.seq_len,
+                                         shape.global_batch, "train")
+            b_axes = ts.batch_axes(cfg, "train")
+            b_specs = {k: shd.resolve_spec(batch_avals[k].shape, b_axes[k],
+                                           mesh, rules)
+                       for k in batch_avals}
+            b_shardings = {k: jax.sharding.NamedSharding(mesh, s)
+                           for k, s in b_specs.items()}
+            opt_avals = opt.init(params_avals, abstract=True)
+            o_shardings = opt.AdamWState(
+                step=jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()),
+                mu=p_shardings, nu=p_shardings)
+            step = ts.make_train_step(cfg, microbatch=microbatch,
+                                      compress=compress)
+            fn = jax.jit(step,
+                         in_shardings=(p_shardings, o_shardings,
+                                       b_shardings),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params_avals, opt_avals, batch_avals)
+        elif shape.kind == "prefill":
+            batch_avals = ts.input_specs(cfg, shape.seq_len,
+                                         shape.global_batch, "prefill")
+            b_axes = ts.batch_axes(cfg, "prefill")
+            b_shardings = {
+                k: jax.sharding.NamedSharding(
+                    mesh, shd.resolve_spec(batch_avals[k].shape, b_axes[k],
+                                           mesh, rules))
+                for k in batch_avals}
+            fn = jax.jit(ss.make_prefill(cfg),
+                         in_shardings=(p_shardings, b_shardings))
+            lowered = fn.lower(params_avals, batch_avals)
+        else:  # decode
+            tok_aval, cache_avals, len_aval = ss.decode_input_specs(
+                cfg, shape.seq_len, shape.global_batch)
+            c_axes = zoo.cache_axes(cfg)
+            c_shardings = jax.tree.map(
+                lambda av, ax: jax.sharding.NamedSharding(
+                    mesh, shd.resolve_spec(av.shape, ax, mesh, rules)),
+                cache_avals, c_axes,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+            t_sharding = jax.sharding.NamedSharding(
+                mesh, shd.resolve_spec((shape.global_batch, 1),
+                                       ("batch", None), mesh, rules))
+            l_sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
+            fn = jax.jit(ss.make_decode_step(cfg),
+                         in_shardings=(p_shardings, t_sharding,
+                                       c_shardings, l_sharding),
+                         donate_argnums=(2,))
+            lowered = fn.lower(params_avals, tok_aval, cache_avals,
+                               len_aval)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "n_devices": 512 if multi_pod else 256,
+            "kind": shape.kind, "seq_len": shape.seq_len,
+            "global_batch": shape.global_batch,
+            "n_params": cfg.n_params(),
+            "n_active_params": cfg.n_active_params(),
+            "microbatch": microbatch, "fsdp": fsdp, "remat": remat}
+    return lowered, meta, cfg, shape
+
+
+def _compile_and_measure(lowered):
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                mem_info[f] = int(v)
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    hlo = compiled.as_text()
+    colls = rf.parse_collectives(hlo)
+    wire = sum(c["wire_bytes"] for c in colls.values())
+    return {"compile_s": round(t_compile, 1), "flops": flops,
+            "bytes": bytes_acc, "wire": wire, "collectives": colls,
+            "memory_analysis": mem_info, "hlo_bytes": len(hlo)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             tag: str = "", probes: bool = True, **kw):
+    """Full-depth compile (compilability + memory_analysis) plus the
+    1-unit/2-unit unrolled probes whose difference gives exact per-layer
+    flops/bytes/collective-bytes (cost_analysis cannot see while-loop trip
+    counts, so the scan-based module alone under-counts; EXPERIMENTS.md
+    §Dry-run documents the method)."""
+    t0 = time.time()
+    lowered, meta, cfg, shape = lower_cell(arch, shape_name, multi_pod,
+                                           **kw)
+    t_lower = time.time() - t0
+    full = _compile_and_measure(lowered)
+
+    meta.update({
+        "lower_s": round(t_lower, 1), "compile_s": full["compile_s"],
+        "memory_analysis": full["memory_analysis"],
+        "collectives_fullscan": full["collectives"],
+        "hlo_bytes": full["hlo_bytes"],
+    })
+
+    if probes:
+        u = probe_unit(cfg)
+        kw.pop("probe_layers", None)
+        l1, _, _, _ = lower_cell(arch, shape_name, multi_pod,
+                                 probe_layers=u, **kw)
+        p1 = _compile_and_measure(l1)
+        l2, _, _, _ = lower_cell(arch, shape_name, multi_pod,
+                                 probe_layers=2 * u, **kw)
+        p2 = _compile_and_measure(l2)
+        n_units = cfg.n_layers / u
+        flops = p1["flops"] + (n_units - 1) * (p2["flops"] - p1["flops"])
+        bytes_acc = p1["bytes"] + (n_units - 1) * (p2["bytes"] - p1["bytes"])
+        wire = p1["wire"] + (n_units - 1) * (p2["wire"] - p1["wire"])
+        meta["probe"] = {
+            "unit": u, "l1": p1, "l2": p2,
+            "per_unit_flops": p2["flops"] - p1["flops"],
+            "per_unit_bytes": p2["bytes"] - p1["bytes"],
+            "per_unit_wire": p2["wire"] - p1["wire"],
+        }
+    else:
+        flops, bytes_acc, wire = full["flops"], full["bytes"], full["wire"]
+
+    terms = rf.roofline_terms(flops, bytes_acc, wire)
+    mflops = rf.model_flops(cfg, shape.seq_len, shape.global_batch,
+                            shape.kind)
+    global_flops = flops * meta["n_devices"]
+    meta.update({
+        "flops_per_device": flops, "bytes_per_device": bytes_acc,
+        "wire_bytes_per_device": wire, "roofline": terms,
+        "model_flops": mflops,
+        "useful_flops_ratio": (mflops / global_flops
+                               if global_flops else 0.0),
+    })
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch}__{shape_name}__{meta['mesh']}{tag}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(meta, f, indent=1)
+    print(rf.summarize(meta))
+    print(f"  lower={t_lower:.1f}s compile={meta['compile_s']:.1f}s "
+          f"mem={meta['memory_analysis']} "
+          f"colls={ {k: v['count'] for k, v in full['collectives'].items()} }")
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat", default="block")
+    ap.add_argument("--compress", default=None)
+    ap.add_argument("--kv-dtype", default=None)
+    ap.add_argument("--param-dtype", default=None)
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--list-cells", action="store_true")
+    args = ap.parse_args()
+
+    if args.list_cells:
+        for a, s in cells():
+            print(a, s)
+        return
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for mp in meshes:
+        run_cell(args.arch, args.shape, mp, args.out, tag=args.tag,
+                 probes=not args.no_probes,
+                 microbatch=args.microbatch, fsdp=not args.no_fsdp,
+                 remat=args.remat, compress=args.compress,
+                 kv_dtype=args.kv_dtype, param_dtype=args.param_dtype)
+
+
+if __name__ == "__main__":
+    main()

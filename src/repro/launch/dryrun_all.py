@@ -1,0 +1,69 @@
+"""Sweep driver: every (arch x shape) cell on both production meshes.
+
+One subprocess per cell (fresh XLA state, no compile-cache memory
+accumulation); skips cells whose JSON already exists, so the sweep is
+resumable.  Single-pod runs include the exact-cost probes (the roofline
+table is single-pod); the multi-pod runs prove the `pod` axis shards.
+
+  PYTHONPATH=src python -m repro.launch.dryrun_all [--only-missing]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    args = ap.parse_args()
+
+    # enumerate cells without initializing jax in this process
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    listing = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--list-cells"],
+        capture_output=True, text=True, env=env, check=True)
+    cells = [tuple(line.split()) for line in
+             listing.stdout.strip().splitlines()]
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    t0 = time.time()
+    failures = []
+    for mesh in meshes:
+        for arch, shape in cells:
+            out_json = os.path.join(args.out,
+                                    f"{arch}__{shape}__{mesh}.json")
+            if os.path.exists(out_json):
+                print(f"skip {arch} {shape} {mesh} (exists)")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh,
+                   "--out", args.out]
+            if mesh == "multi":
+                cmd.append("--no-probes")
+            print(f"[{time.time()-t0:7.0f}s] {arch} {shape} {mesh} ...",
+                  flush=True)
+            r = subprocess.run(cmd, env=env, capture_output=True,
+                               text=True, timeout=3600)
+            if r.returncode != 0:
+                failures.append((arch, shape, mesh))
+                print(f"  FAILED:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}",
+                      flush=True)
+            else:
+                print("  " + r.stdout.strip().splitlines()[-2].strip(),
+                      flush=True)
+    print(f"done in {time.time()-t0:.0f}s; failures: {failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Generate the §Roofline-table markdown from dry-run JSONs and splice it
+into EXPERIMENTS.md (idempotent)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def build_table(dryrun_dir: str) -> str:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir,
+                                           "*__single.json"))):
+        d = json.load(open(f))
+        t = d["roofline"]
+        mem = d.get("memory_analysis", {})
+        rows.append((
+            d["arch"], d["shape"], t["compute_s"], t["memory_s"],
+            t["collective_s"], t["dominant"], d["useful_flops_ratio"],
+            (mem.get("temp_size_in_bytes", 0) +
+             mem.get("argument_size_in_bytes", 0)) / 1e9))
+    rows.sort()
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful | dev GB (arg+temp) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r[0]} | {r[1]} | {r[2]:.3e} | {r[3]:.3e} | {r[4]:.3e} "
+            f"| {r[5]} | {r[6]:.2f} | {r[7]:.1f} |")
+    multi = len(glob.glob(os.path.join(dryrun_dir, "*__multi.json")))
+    single = len(rows)
+    lines.append("")
+    lines.append(f"Cells compiled: {single} single-pod (probed) + "
+                 f"{multi} multi-pod (2×16×16) = {single + multi}.")
+    return "\n".join(lines)
+
+
+def main():
+    dryrun_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    table = build_table(dryrun_dir)
+    path = "EXPERIMENTS.md"
+    text = open(path).read()
+    marker = "<!-- ROOFLINE_TABLE -->"
+    head = text.split(marker)[0]
+    open(path, "w").write(head + marker + "\n\n" + table + "\n")
+    print(table)
+
+
+if __name__ == "__main__":
+    main()

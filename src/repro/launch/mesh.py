@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (data, model).
+Multi-pod: 2x16x16 = 512 chips (pod, data, model); the `pod` axis composes
+with `data` for DP/FSDP and optionally carries pipeline stages
+(parallel/pipeline.py).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for smoke tests on the real CPU."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants for the roofline (launch/roofline.py)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link

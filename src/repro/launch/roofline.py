@@ -1,0 +1,128 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (per the assignment):
+
+    compute   = HLO_FLOPs(per device)      / peak_FLOP/s
+    memory    = HLO_bytes(per device)      / HBM_bw
+    collective= wire_bytes(per device)     / link_bw
+
+cost_analysis() yields per-device FLOPs/bytes (the SPMD module is the
+per-device program).  Collective bytes are NOT in cost_analysis: we parse
+the optimized HLO and apply ring-model wire costs per op:
+
+    all-reduce      2 * size * (g-1)/g
+    all-gather      size_result * (g-1)/g
+    reduce-scatter  size_operand * (g-1)/g
+    all-to-all      size * (g-1)/g
+    collective-permute  size
+
+where g = replica-group size parsed from the op.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict
+
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, dict]:
+    """Per-op-kind wire-byte totals (per device) from optimized HLO."""
+    out: Dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        type_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(type_str)
+        g = 1
+        mg = _GROUPS_IOTA_RE.search(line)
+        if mg:
+            g = int(mg.group(2))
+        else:
+            mg = _GROUPS_RE.search(line)
+            if mg and mg.group(1).strip():
+                g = len(mg.group(1).split(","))
+        if kind == "collective-permute":
+            wire = size                      # point-to-point, no groups
+        elif g <= 1:
+            wire = 0
+        elif kind == "all-reduce":
+            wire = 2 * size * (g - 1) // g
+        elif kind == "all-gather":
+            wire = size * (g - 1) // g
+        elif kind == "reduce-scatter":
+            # `size` is the (scattered) result; operand = size * g
+            wire = size * (g - 1)
+        elif kind == "all-to-all":
+            wire = size * (g - 1) // g
+        else:
+            wire = size
+        rec = out.setdefault(kind, {"count": 0, "wire_bytes": 0})
+        rec["count"] += 1
+        rec["wire_bytes"] += wire
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   wire_bytes_per_dev: float) -> dict:
+    compute_s = flops_per_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_per_dev / HBM_BW
+    coll_s = wire_bytes_per_dev / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    total = max(compute_s, memory_s, coll_s)
+    return {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "roofline_fraction": compute_s / total if total > 0 else 0.0,
+    }
+
+
+def model_flops(cfg, seq_len: int, global_batch: int, kind: str) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N_active*B
+    (decode, per step); MoE uses active params."""
+    n = cfg.n_active_params()
+    if kind == "train":
+        return 6.0 * n * seq_len * global_batch
+    if kind == "prefill":
+        return 2.0 * n * seq_len * global_batch
+    return 2.0 * n * global_batch     # decode: one token per sequence
+
+
+def summarize(cell: dict) -> str:
+    t = cell["roofline"]
+    return (f"{cell['arch']:22s} {cell['shape']:12s} {cell['mesh']:6s} "
+            f"compute={t['compute_s']:.3e}s memory={t['memory_s']:.3e}s "
+            f"coll={t['collective_s']:.3e}s dom={t['dominant']:10s} "
+            f"useful={cell.get('useful_flops_ratio', 0):.2f}")

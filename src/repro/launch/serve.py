@@ -1,0 +1,47 @@
+"""Serving driver: continuous batching with the splay-adaptive engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch minitron-8b --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import model_zoo as zoo
+from repro.serve.engine import Engine, Request
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="minitron-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = (registry.get_smoke(args.arch) if args.smoke
+           else registry.get(args.arch))
+    params, _ = zoo.build_params(cfg, jax.random.PRNGKey(args.seed))
+    eng = Engine(cfg, params, max_batch=args.max_batch, max_seq=128)
+    rng = np.random.default_rng(args.seed)
+    for i in range(args.requests):
+        eng.submit(Request(
+            seq_id=i, prompt=rng.integers(1, cfg.vocab,
+                                          rng.integers(2, 8)),
+            max_new=args.max_new))
+    results = eng.run()
+    for sid in sorted(results):
+        print(f"seq {sid}: {results[sid]}")
+    print(f"served {len(results)} sequences; pool util "
+          f"{eng.pool.utilization:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,179 @@
+"""GQA/MQA/MHA attention: full, blockwise (online-softmax) and decode.
+
+Blockwise attention scans KV chunks with a running (max, sum) — O(seq)
+memory, compact HLO under scan, and the natural remat boundary for the
+32k-prefill shapes.  Masks: causal, prefix-LM (paligemma), full (whisper
+encoder / cross-attention).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import sharding as shd
+
+BLOCKWISE_THRESHOLD = 2048
+KV_CHUNK = 1024
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def _mask_bias(mask_mode: str, q_pos, k_pos, prefix_len: int, dtype):
+    """[q, k] additive bias."""
+    if mask_mode == "full":
+        return None
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if mask_mode == "prefix":
+        ok = ok | (k_pos[None, :] < prefix_len)
+    return jnp.where(ok, 0.0, -1e30).astype(dtype)
+
+
+def full_attention(q, k, v, mask_mode: str = "causal",
+                   prefix_len: int = 0, q_offset=None):
+    """q [b,sq,h,d], k/v [b,sk,kv,d] (kv repeated to h by caller or here)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    n_rep = h // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = d ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    logits = shd.constrain(logits, "batch", "heads", None, None)
+    q_pos = (jnp.arange(sq) if q_offset is None
+             else q_offset + jnp.arange(sq))
+    bias = _mask_bias(mask_mode, q_pos, jnp.arange(sk), prefix_len,
+                      jnp.float32)
+    l32 = logits.astype(jnp.float32)
+    if bias is not None:
+        l32 = l32 + bias[None, None]
+    probs = jax.nn.softmax(l32, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return shd.constrain(out, "batch", "seq", "heads", None)
+
+
+def blockwise_attention(q, k, v, mask_mode: str = "causal",
+                        prefix_len: int = 0, kv_chunk: int = KV_CHUNK,
+                        unroll: bool = False):
+    """Online-softmax attention, scanning KV chunks. O(sq * kv_chunk) live
+    memory instead of O(sq*sk).  unroll=True replaces the scan with an
+    unrolled loop (dry-run probe path: exact cost_analysis)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    n_rep = h // k.shape[2]
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = d ** -0.5
+    n_chunks = sk // kv_chunk
+    k = k.reshape(b, n_chunks, kv_chunk, h, d)
+    v = v.reshape(b, n_chunks, kv_chunk, h, d)
+    q_pos = jnp.arange(sq)
+
+    def chunk_step(carry, kv_c):
+        m_prev, s_prev, o_prev, c_idx = carry
+        k_c, v_c = kv_c
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k_c).astype(
+            jnp.float32) * scale
+        logits = shd.constrain(logits, "batch", "heads", "cp_seq", None)
+        k_pos = c_idx * kv_chunk + jnp.arange(kv_chunk)
+        bias = _mask_bias(mask_mode, q_pos, k_pos, prefix_len, jnp.float32)
+        if bias is not None:
+            logits = logits + bias[None, None]
+        m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        p = shd.constrain(p, "batch", "heads", "cp_seq", None)
+        s_new = s_prev * alpha + p.sum(axis=-1)
+        o_new = (o_prev * alpha[..., None] +
+                 jnp.einsum("bhqk,bkhd->bhqd", p.astype(q.dtype), v_c
+                            ).astype(jnp.float32))
+        o_new = shd.constrain(o_new, "batch", "heads", "cp_seq", None)
+        return (m_new, s_new, o_new, c_idx + 1), None
+
+    m0 = jnp.full((b, h, sq), -1e30, jnp.float32)
+    s0 = jnp.zeros((b, h, sq), jnp.float32)
+    o0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    carry = (m0, s0, o0, jnp.array(0, jnp.int32))
+    xs = (k.swapaxes(0, 1), v.swapaxes(0, 1))
+    if unroll:
+        for i in range(n_chunks):
+            carry, _ = chunk_step(carry, jax.tree.map(lambda a: a[i], xs))
+        m, s, o, _ = carry
+    else:
+        (m, s, o, _), _ = jax.lax.scan(chunk_step, carry, xs)
+    out = (o / jnp.maximum(s, 1e-30)[..., None]).astype(q.dtype)
+    out = out.transpose(0, 2, 1, 3)   # [b, sq, h, d]
+    return shd.constrain(out, "batch", "cp_seq", "heads", None)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-position decode: q [b,1,h,d] against cache [b,sk,kv,d].
+    Grouped-query einsum — the KV cache is NEVER broadcast to h heads
+    (repeat_kv would multiply decode HBM traffic by h/kv; §Perf iter C2).
+    Positions >= cache_len are masked out."""
+    b, sq, h, d = q.shape
+    sk, kv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, sq, kv, rep, d)
+    scale = d ** -0.5
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k_cache).astype(
+        jnp.float32) * scale
+    logits = shd.constrain(logits, "batch", "kv", None, None, "kvseq")
+    valid = (jnp.arange(sk) < cache_len)[None, None, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v_cache)
+    out = out.reshape(b, sq, h, d)
+    return shd.constrain(out, "batch", None, "heads", None)
+
+
+def quantize_kv(x):
+    """Per-token symmetric int8 quantization: x [b,s,kv,d] ->
+    (int8 [b,s,kv,d], scale f32 [b,s,kv]).  Append-only friendly (each
+    token carries its own scale; no requantization ever)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) /
+                           scale[..., None] * 127.0), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def decode_attention_q8(q, k_q, v_q, k_sc, v_sc, cache_len):
+    """Grouped decode attention over an int8 KV cache (§Perf iter C2).
+    Scales fold into the attention algebra instead of dequantizing the
+    cache: logits = (q @ k_q^T) * k_sc and out = probs' @ v_q with
+    probs' = probs * v_sc — the cache is read at 1 byte/elem."""
+    b, sq, h, d = q.shape
+    sk, kv = k_q.shape[1], k_q.shape[2]
+    rep = h // kv
+    qg = q.reshape(b, sq, kv, rep, d)
+    scale = d ** -0.5
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg.astype(jnp.float32),
+                        k_q.astype(jnp.float32) / 127.0) * scale
+    logits = logits * k_sc.transpose(0, 2, 1)[:, :, None, None, :]
+    logits = shd.constrain(logits, "batch", "kv", None, None, "kvseq")
+    valid = (jnp.arange(sk) < cache_len)[None, None, None, None, :]
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = probs * (v_sc.transpose(0, 2, 1)[:, :, None, None, :] / 127.0)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs.astype(q.dtype),
+                     v_q.astype(q.dtype))
+    out = out.reshape(b, sq, h, d)
+    return shd.constrain(out, "batch", None, "heads", None)
+
+
+def attention(q, k, v, mask_mode: str = "causal", prefix_len: int = 0,
+              unroll: bool = False):
+    sq, sk = q.shape[1], k.shape[1]
+    if sq == sk and sk > BLOCKWISE_THRESHOLD and sk % KV_CHUNK == 0:
+        return blockwise_attention(q, k, v, mask_mode, prefix_len,
+                                   unroll=unroll)
+    return full_attention(q, k, v, mask_mode, prefix_len)

@@ -1,0 +1,126 @@
+"""Shared layers + the parameter builder.
+
+``ParamBuilder`` declares every parameter exactly once (shape + logical
+sharding axes + init); it can then materialize real values (smoke tests,
+examples) or ``ShapeDtypeStruct`` avals (the dry-run lowers against avals,
+allocating nothing), and always produces the matching PartitionSpec tree.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel import sharding as shd
+
+
+class ParamBuilder:
+    def __init__(self, rng: Optional[jax.Array], abstract: bool,
+                 param_dtype=jnp.float32):
+        self.abstract = abstract
+        self.rng = rng
+        self.param_dtype = param_dtype
+        self.params: Dict[str, Any] = {}
+        self.axes: Dict[str, Tuple[Optional[str], ...]] = {}
+
+    def _split(self):
+        self.rng, k = jax.random.split(self.rng)
+        return k
+
+    def add(self, tree: Dict, name: str, shape: Sequence[int],
+            axes: Sequence[Optional[str]], init: str = "normal",
+            scale: Optional[float] = None):
+        shape = tuple(int(s) for s in shape)
+        assert len(shape) == len(axes), (name, shape, axes)
+        if self.abstract:
+            tree[name] = jax.ShapeDtypeStruct(shape, self.param_dtype)
+        else:
+            if init == "zeros":
+                tree[name] = jnp.zeros(shape, self.param_dtype)
+            elif init == "ones":
+                tree[name] = jnp.ones(shape, self.param_dtype)
+            elif init == "ssm_a":      # negative A for stable SSM decay
+                tree[name] = -jnp.exp(jax.random.uniform(
+                    self._split(), shape, self.param_dtype, 0.0, 1.5))
+            else:
+                fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+                s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+                tree[name] = (jax.random.normal(
+                    self._split(), shape, self.param_dtype) * s)
+        tree.setdefault("__axes__", {})[name] = tuple(axes)
+        return tree[name]
+
+
+def split_axes(tree):
+    """Separate the parameter pytree from the logical-axis annotations,
+    returning (params, spec_tree_fn) where spec_tree_fn(mesh, rules)
+    produces a matching PartitionSpec tree."""
+    if isinstance(tree, dict):
+        params, axes = {}, {}
+        for k, v in tree.items():
+            if k == "__axes__":
+                continue
+            if isinstance(v, dict):
+                p, a = split_axes(v)
+                params[k], axes[k] = p, a
+            else:
+                params[k] = v
+                axes[k] = tree.get("__axes__", {}).get(k)
+        return params, axes
+    return tree, None
+
+
+def axes_to_specs(params, axes, mesh, rules):
+    """PartitionSpec tree matching params, resolved against (mesh, rules)."""
+    if isinstance(params, dict):
+        return {k: axes_to_specs(params[k], axes[k], mesh, rules)
+                for k in params}
+    if axes is None:
+        return jax.sharding.PartitionSpec()
+    return shd.resolve_spec(params.shape, axes, mesh, rules)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps: float):
+    """f32 statistics, bf16 output as the LAST fused op: whatever XLA
+    fuses this into ends bf16, so SP boundary collectives move bf16 bytes
+    (gathering the f32 pre-cast doubled the wire; §Perf iter B3)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return y.astype(dt) * gamma.astype(dt)
+
+
+def rope(q, positions, theta: float):
+    """Rotary embedding over the last dim of q [..., seq, ..., head_dim]."""
+    hd = q.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # [..., s, half]
+    # broadcast over head axis: q is [b, s, h, d]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    q1, q2 = q[..., :half], q[..., half:]
+    out = jnp.concatenate(
+        [q1 * cos - q2 * sin, q2 * cos + q1 * sin], axis=-1)
+    return out.astype(q.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down, compute_dtype):
+    w_gate = shd.gather_param(w_gate.astype(compute_dtype), "fsdp", "mlp")
+    w_up = shd.gather_param(w_up.astype(compute_dtype), "fsdp", "mlp")
+    w_down = shd.gather_param(w_down.astype(compute_dtype), "mlp", "fsdp")
+    h = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    h = jax.nn.silu(h) * u
+    h = shd.constrain(h, "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, w_down)
+    # sequence-parallel residual stream when cp_seq is active (§Perf A2):
+    # exits become reduce-scatters instead of full all-reduces
+    return shd.constrain(out, "batch", "cp_seq", "embed")

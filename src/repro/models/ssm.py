@@ -1,0 +1,159 @@
+"""Mamba2 / SSD (state-space duality) block — chunked scan + decode step.
+
+Chunked SSD (Dao & Gu 2024): quadratic attention-like compute inside
+chunks of length Q, linear state recurrence across chunks.  Heads are
+sharded over the `model` axis (TP for SSMs); chunk scan keeps the HLO
+compact for the 500k-sequence cells.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import sharding as shd
+from repro.models.layers import rms_norm
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x [B,S,ch], w [width,ch], b [ch]."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, unroll: bool = False):
+    """xh [b,s,h,p], dt [b,s,h] (post-softplus), A [h] (negative),
+    Bm/Cm [b,s,n].  Returns y [b,s,h,p] and final state [b,h,n,p].
+    unroll=True unrolls the inter-chunk recurrence (dry-run probes)."""
+    b, s, h, p = xh.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    xh = xh.reshape(b, nc, q, h, p)
+    dt = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    Bm = Bm.reshape(b, nc, q, n)
+    Cm = Cm.reshape(b, nc, q, n)
+
+    dA = dt * A.astype(jnp.float32)                       # [b,nc,q,h]
+    cs = jnp.cumsum(dA, axis=2)                           # [b,nc,q,h]
+    # intra-chunk decay matrix L[q,k] = exp(cs[q]-cs[k]) for q>=k.
+    # Mask BEFORE the exp: out-of-mask diffs are positive and overflow,
+    # and where(mask, exp(inf), 0) back-propagates 0*inf = NaN.
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]    # [b,nc,q,k,h]
+    tri = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    L = jnp.exp(jnp.where(tri, diff, -1e30))
+
+    xdt = xh.astype(jnp.float32) * dt[..., None]          # [b,nc,q,h,p]
+    cb = jnp.einsum("bcqn,bckn->bcqk", Cm.astype(jnp.float32),
+                    Bm.astype(jnp.float32))
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, L, xdt)
+
+    # chunk states: S_c[h,n,p] = sum_k B[k,n] exp(cs[-1]-cs[k]) xdt[k]
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)            # [b,nc,q,h]
+    S = jnp.einsum("bckn,bckh,bckhp->bchnp",
+                   Bm.astype(jnp.float32), decay_end, xdt)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                # [b,nc,h]
+
+    def scan_fn(carry, inp):
+        s_c, d_c = inp                                    # [b,h,n,p], [b,h]
+        new = carry * d_c[..., None, None] + s_c
+        return new, carry                                  # emit state BEFORE
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = (S.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    if unroll:
+        carry, outs = init, []
+        for i in range(nc):
+            carry, out = scan_fn(carry, jax.tree.map(lambda a: a[i], xs))
+            outs.append(out)
+        final, prev_states = carry, jnp.stack(outs)
+    else:
+        final, prev_states = jax.lax.scan(scan_fn, init, xs)
+    prev_states = prev_states.swapaxes(0, 1)              # [b,nc,h,n,p]
+
+    y_off = jnp.einsum("bcqn,bchnp,bcqh->bcqhp",
+                       Cm.astype(jnp.float32), prev_states, jnp.exp(cs))
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_block(x, p, cfg, compute_dtype):
+    """Full Mamba2 block: in_proj -> conv -> SSD -> gated norm -> out_proj.
+    x [B,S,d] -> [B,S,d]."""
+    b, s, d = x.shape
+    di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.ssm_heads
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(compute_dtype))
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(compute_dtype),
+                       p["conv_b"].astype(compute_dtype))
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    xh = xs.reshape(b, s, h, hd)
+    xh = shd.constrain(xh, "batch", "seq", "ssm_heads", None)
+    y, _ = ssd_chunked(xh, dt, p["A"], Bm, Cm, cfg.ssm_chunk,
+                       unroll=not cfg.scan_layers)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * \
+        xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(compute_dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(compute_dtype))
+
+
+def mamba2_decode(x, state, p, cfg, compute_dtype):
+    """Single-token decode.  x [B,1,d]; state dict with `ssm` [B,h,n,hd]
+    and `conv` [B,width-1,2*di... conv channels].  Returns (y, state)."""
+    b = x.shape[0]
+    di, n, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_head_dim
+    h = cfg.ssm_heads
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(compute_dtype))
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    # rolling conv cache
+    conv_buf = jnp.concatenate([state["conv"], xbc], axis=1)
+    w = p["conv_w"].astype(compute_dtype)                  # [width, ch]
+    xbc1 = (conv_buf * w[None]).sum(axis=1, keepdims=True) + \
+        p["conv_b"].astype(compute_dtype)
+    xbc1 = jax.nn.silu(xbc1)
+    xs, Bm, Cm = jnp.split(xbc1, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))  # [B,1,h]
+    xh = xs.reshape(b, h, hd).astype(jnp.float32)
+    dA = jnp.exp(dt[:, 0, :] * p["A"].astype(jnp.float32))  # [B,h]
+    ssm = state["ssm"]                                      # [B,h,n,hd]
+    ssm = ssm * dA[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bm[:, 0].astype(jnp.float32),
+        dt[:, 0], xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), ssm)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(compute_dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(compute_dtype))
+    new_state = {"ssm": ssm, "conv": conv_buf[:, 1:]}
+    return out, new_state
+
+
+def build_ssm_params(pb, tree, cfg):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.ssm_heads
+    proj_out = 2 * di + 2 * n + h
+    pb.add(tree, "in_proj", (d, proj_out), ("fsdp", "ssm_proj"))
+    pb.add(tree, "conv_w", (cfg.conv_width, di + 2 * n), ("conv", None))
+    pb.add(tree, "conv_b", (di + 2 * n,), (None,), init="zeros")
+    pb.add(tree, "dt_bias", (h,), ("ssm_heads",), init="zeros")
+    pb.add(tree, "A", (h,), ("ssm_heads",), init="ssm_a")
+    pb.add(tree, "D", (h,), ("ssm_heads",), init="ones")
+    pb.add(tree, "norm", (di,), (None,), init="ones")
+    pb.add(tree, "out_proj", (di, d), ("ssm_proj", "fsdp"))
+    return tree

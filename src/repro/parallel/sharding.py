@@ -1,0 +1,145 @@
+"""Logical-axis sharding: names in model code, meshes at launch.
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"mlp", ...).  At launch, a rule table maps logical names to mesh axes
+(DP/TP/EP/SP over ``(pod, data, model)``).  Resolution checks divisibility:
+a dimension that does not divide by the mesh-axis product falls back to
+replication (e.g. qwen2's 14 heads on a 16-way model axis -> heads
+replicated, and the contraction-dim rule kicks in instead — row-parallel
+TP).  This keeps every (arch x mesh) cell compilable without per-arch
+special cases.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+# -- default rule tables -----------------------------------------------------
+
+def default_rules(multi_pod: bool = False,
+                  seq_sharded: bool = False,
+                  fsdp: bool = True) -> Rules:
+    dp: Tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    rules: Rules = {
+        "batch": dp,
+        "seq": ("data",) if seq_sharded else None,
+        "kvseq": ("data",) if seq_sharded else None,
+        "cp_seq": None,   # Megatron-SP residual stream (train/prefill)
+        "cp_q": None,     # context-parallel attention q (set when heads
+                          # cannot shard over `model`)
+        "embed": None,
+        "heads": ("model",),
+        "kv": ("model",),
+        "head_dim": None,
+        "mlp": ("model",),
+        "expert": ("model",),
+        "expert_cap": None,
+        "vocab": ("model",),
+        "fsdp": dp if fsdp else None,     # ZeRO-style second-axis sharding
+        "layers": None,
+        "ssm_heads": ("model",),
+        "ssm_proj": ("model",),
+        "state": None,
+        "conv": None,
+        "frames": None,
+        None: None,
+    }
+    return rules
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Rules = {}
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Rules] = None):
+    """Activate (mesh, rules) for logical-axis resolution.  With mesh=None
+    all constraints become no-ops (single-host smoke tests)."""
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, (rules or {})
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def resolve_spec(shape: Sequence[int], names: Sequence[Optional[str]],
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[Rules] = None) -> P:
+    """Logical names -> PartitionSpec with divisibility fallback.  A mesh
+    axis is never used twice in one spec (first dim wins)."""
+    mesh = mesh or _CTX.mesh
+    rules = rules if rules is not None else _CTX.rules
+    if mesh is None:
+        return P()
+    used = set()
+    out = []
+    for dim, name in zip(shape, names):
+        axes = rules.get(name) if name is not None else None
+        if not axes:
+            out.append(None)
+            continue
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if not axes or dim % _axes_size(mesh, axes) != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the active (mesh, rules); no-op when
+    no mesh is active."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = resolve_spec(x.shape, names)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape: Sequence[int],
+                   names: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(shape, names))
+
+
+def gather_param(w: jax.Array, *storage_names: Optional[str]) -> jax.Array:
+    """ZeRO-3 semantics: force an all-gather of the fsdp-sharded storage
+    axes at compute time (TP axes kept).  Without this, XLA resolves the
+    fsdp-on-contraction-dim mismatch with row-parallel *activation*
+    all-reduces — orders of magnitude more wire than gathering the weight
+    (measured in EXPERIMENTS.md §Perf iteration 1)."""
+    names = [None if n == "fsdp" else n for n in storage_names]
+    return constrain(w, *names)

@@ -1,0 +1,69 @@
+"""Paged KV-cache pool with a splay-list page index.
+
+Pages of ``page_size`` positions are pooled; each sequence owns a chain of
+pages.  The *index* mapping (seq_id -> slot) is a splay-list, so lookups
+for hot sessions are O(log(m/f)) — the paper's structure doing real work
+in the serving path.  (The dense cache used by decode cells lives in
+model_zoo.init_cache; this pool backs the engine's session management.)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.ref_py import SplayList
+
+
+class PagedKVPool:
+    def __init__(self, n_pages: int, page_size: int, max_level: int = 24,
+                 p: float = 0.1):
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.free: List[int] = list(range(n_pages))
+        self.chains: Dict[int, List[int]] = {}
+        self.lengths: Dict[int, int] = {}
+        self.index = SplayList(max_level=max_level, p=p)
+
+    def create(self, seq_id: int) -> bool:
+        if seq_id in self.chains:
+            return False
+        self.chains[seq_id] = []
+        self.lengths[seq_id] = 0
+        self.index.insert(seq_id)
+        return True
+
+    def lookup(self, seq_id: int) -> Optional[List[int]]:
+        """Splay-indexed hot-session lookup."""
+        if not self.index.contains(seq_id):
+            return None
+        return self.chains.get(seq_id)
+
+    def append_tokens(self, seq_id: int, n: int) -> bool:
+        """Reserve page space for n more positions."""
+        assert seq_id in self.chains
+        need = (self.lengths[seq_id] + n + self.page_size - 1) \
+            // self.page_size
+        while len(self.chains[seq_id]) < need:
+            if not self.free:
+                return False
+            self.chains[seq_id].append(self.free.pop())
+        self.lengths[seq_id] += n
+        return True
+
+    def release(self, seq_id: int) -> None:
+        if seq_id in self.chains:
+            self.free.extend(self.chains.pop(seq_id))
+            self.lengths.pop(seq_id, None)
+            self.index.delete(seq_id)
+
+    def page_table(self, seq_id: int, max_pages: int) -> np.ndarray:
+        chain = self.chains.get(seq_id, [])
+        out = np.full(max_pages, -1, np.int32)
+        out[:len(chain)] = chain
+        return out
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.n_pages

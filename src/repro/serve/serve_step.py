@@ -1,0 +1,41 @@
+"""Serving steps: prefill + single-token decode with stacked caches.
+
+``make_decode_step(cfg)`` is what decode_32k / long_500k cells lower;
+``make_prefill(cfg)`` is the prefill_32k cell.  Greedy sampling keeps the
+step self-contained (temperature sampling lives in serve/engine.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model_zoo as zoo
+
+
+def make_prefill(cfg: ModelConfig):
+    def prefill(params, batch):
+        logits = zoo.forward(params, cfg, batch["tokens"],
+                             frontend=batch.get("frontend"))
+        return jnp.argmax(logits[:, -1:], axis=-1)
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, cache, cache_len):
+        logits, cache = zoo.decode_step(params, cfg, tokens, cache,
+                                        cache_len)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        return next_tok.astype(jnp.int32), cache
+    return decode_step
+
+
+def decode_input_specs(cfg: ModelConfig, seq_len: int, global_batch: int):
+    """Avals for one decode step with a seq_len KV/SSM cache."""
+    tokens = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)
+    cache = zoo.init_cache(cfg, global_batch, seq_len, abstract=True)
+    cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, cache, cache_len

@@ -1,0 +1,78 @@
+"""Data pipeline: Zipf token synthesis + background prefetch + the
+splay-cache frequency tap.
+
+The Zipf sampler is shared with the paper's workload generators
+(core/workload.py) — vocabulary skew IS the access skew the splay-list
+exploits; the pipeline feeds observed ids to the SplayVocabCache so the
+embedding hot tier adapts online.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.core.workload import zipf_token_ids
+from repro.core.splay_cache import SplayVocabCache
+
+
+class SyntheticZipfData:
+    """Deterministic, restartable synthetic LM data (Zipf token ids)."""
+
+    def __init__(self, vocab: int, seq_len: int, global_batch: int,
+                 s: float = 1.0, seed: int = 0,
+                 cache: Optional[SplayVocabCache] = None):
+        self.vocab, self.seq_len, self.global_batch = (vocab, seq_len,
+                                                       global_batch)
+        self.s = s
+        self.seed = seed
+        self.cache = cache
+        self.step = 0
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng((self.seed << 20) ^ step)
+        toks = zipf_token_ids(rng, self.vocab,
+                              (self.global_batch, self.seq_len), self.s)
+        return {"tokens": toks, "labels": toks.copy()}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            b = self.batch_at(self.step)
+            if self.cache is not None:
+                self.cache.observe(b["tokens"])
+            self.step += 1
+            yield b
+
+
+class PrefetchLoader:
+    """Background-thread prefetch (straggler mitigation: over-issue so a
+    slow read never stalls the train step)."""
+
+    def __init__(self, source, prefetch: int = 4):
+        self.source = iter(source)
+        self.q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self.t = threading.Thread(target=self._fill, daemon=True)
+        self.t.start()
+
+    def _fill(self):
+        for item in self.source:
+            if self._stop.is_set():
+                return
+            self.q.put(item)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self.q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            self.q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,76 @@
+"""Elastic scaling + failure handling.
+
+On a real fleet a node failure surfaces as a collective timeout; recovery
+is: rebuild the mesh from surviving hosts, re-shard the latest checkpoint
+onto the new mesh, resume.  Everything mesh-dependent in this framework
+flows through (mesh, rules) pairs, so re-meshing is a pure function:
+
+    new_mesh = remesh(survivors)                   # largest valid grid
+    params   = reshard(flat_ckpt, specs, new_mesh) # jax.device_put
+
+The batch schedule adapts too: global batch is preserved by raising the
+per-device microbatch count when the data axis shrinks (train.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.parallel import sharding as shd
+
+
+def viable_grid(n_devices: int, model_parallel: int,
+                multi_pod: bool = False) -> Optional[Tuple[int, ...]]:
+    """Largest (pod, data, model) grid fitting n_devices, keeping the
+    model axis intact (TP degree is fixed by weight shapes — elasticity
+    comes from the data/pod axes)."""
+    if n_devices < model_parallel:
+        return None
+    data = n_devices // model_parallel
+    if multi_pod and data % 2 == 0:
+        return (2, data // 2, model_parallel)
+    return (data, model_parallel)
+
+
+def remesh(devices=None, model_parallel: int = 16,
+           multi_pod: bool = False):
+    """Mesh over surviving devices."""
+    devices = devices if devices is not None else jax.devices()
+    grid = viable_grid(len(devices), model_parallel, multi_pod)
+    if grid is None:
+        raise RuntimeError(
+            f"{len(devices)} devices cannot host model_parallel="
+            f"{model_parallel}")
+    n = math.prod(grid)
+    axes = ("pod", "data", "model") if len(grid) == 3 else ("data",
+                                                            "model")
+    dev_grid = np.asarray(devices[:n]).reshape(grid)
+    return jax.sharding.Mesh(dev_grid, axes)
+
+
+def reshard(flat_host: Dict[str, np.ndarray], spec_tree_flat: Dict,
+            mesh) -> Dict[str, jax.Array]:
+    """Place host arrays onto a (new) mesh according to their specs.
+    Works across mesh-shape changes: device_put re-slices from the full
+    host array."""
+    out = {}
+    for name, arr in flat_host.items():
+        spec = spec_tree_flat.get(name, jax.sharding.PartitionSpec())
+        out[name] = jax.device_put(
+            arr, jax.sharding.NamedSharding(mesh, spec))
+    return out
+
+
+def scale_microbatch(global_batch: int, old_data: int, new_data: int,
+                     microbatch: int) -> int:
+    """Preserve global batch across a data-axis shrink by accumulating
+    more microbatches (1000-node posture: losing a pod changes throughput
+    but not optimization semantics)."""
+    if new_data >= old_data:
+        return microbatch
+    factor = math.ceil(old_data / new_data)
+    return microbatch * factor

@@ -1,0 +1,49 @@
+"""Straggler detection / mitigation.
+
+At 1000+ nodes slow hosts dominate tail latency.  Mitigations wired here:
+  * step-time EWMA + p99 tracking; a host whose step time exceeds
+    ``threshold x`` the fleet median for ``patience`` consecutive steps is
+    flagged (on a real fleet: evicted and the mesh rebuilt via
+    elastic.remesh);
+  * data-pipeline over-issue: the loader keeps ``prefetch`` batches ahead
+    so one slow storage read never stalls the step (train/data.py).
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import List, Optional
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, patience: int = 5,
+                 window: int = 128):
+        self.threshold = threshold
+        self.patience = patience
+        self.times = collections.deque(maxlen=window)
+        self.strikes = collections.defaultdict(int)
+
+    def record(self, host_id: int, step_time: float) -> None:
+        self.times.append(step_time)
+
+    def median(self) -> float:
+        if not self.times:
+            return 0.0
+        s = sorted(self.times)
+        return s[len(s) // 2]
+
+    def p99(self) -> float:
+        if not self.times:
+            return 0.0
+        s = sorted(self.times)
+        return s[min(int(len(s) * 0.99), len(s) - 1)]
+
+    def check(self, host_id: int, step_time: float) -> bool:
+        """Record and return True when host should be evicted."""
+        self.record(host_id, step_time)
+        med = self.median()
+        if med > 0 and step_time > self.threshold * med:
+            self.strikes[host_id] += 1
+        else:
+            self.strikes[host_id] = 0
+        return self.strikes[host_id] >= self.patience

@@ -1,0 +1,97 @@
+"""Hypothesis property-based tests for the system's invariants."""
+
+import random
+
+from hypothesis import given, settings, strategies as st
+import numpy as np
+
+from repro.core.ref_py import SplayList
+from repro.core.cbtree import CBTree
+from repro.core import level_arrays as la
+from repro.core import workload as wl
+
+
+ops_strategy = st.lists(
+    st.tuples(st.sampled_from(["c", "i", "d"]),
+              st.integers(min_value=0, max_value=63),
+              st.booleans()),
+    min_size=1, max_size=300)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=ops_strategy)
+def test_splaylist_matches_set_model(ops):
+    sl = SplayList(max_level=14, p=1.0)
+    model = set()
+    for kind, k, coin in ops:
+        if kind == "c":
+            assert sl.contains(k, upd=coin) == (k in model)
+        elif kind == "i":
+            assert sl.insert(k, upd=coin) == (k not in model)
+            model.add(k)
+        else:
+            assert sl.delete(k, upd=coin) == (k in model)
+            model.discard(k)
+    assert sl.size == len(model)
+    assert not sl.check_no_ascent()
+    assert sl.counters_ok()
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=ops_strategy)
+def test_cbtree_matches_set_model(ops):
+    t = CBTree(p=1.0)
+    model = set()
+    for kind, k, coin in ops:
+        if kind == "c":
+            assert t.contains(k, upd=coin) == (k in model)
+        elif kind == "i":
+            assert t.insert(k) == (k not in model)
+            model.add(k)
+        else:
+            assert t.delete(k) == (k in model)
+            model.discard(k)
+    assert t.check_weights()
+
+
+@settings(max_examples=40, deadline=None)
+@given(keys=st.lists(st.integers(0, 10 ** 6), min_size=1, max_size=200,
+                     unique=True),
+       hmax=st.integers(1, 6))
+def test_level_arrays_nested_and_sorted(keys, hmax):
+    rng = np.random.default_rng(42)
+    keys = np.asarray(sorted(keys), np.int32)
+    heights = rng.integers(0, hmax, len(keys)).astype(np.int32)
+    L = la.build(keys, heights)
+    kk = L.keys
+    for r in range(kk.shape[0]):
+        live = kk[r][kk[r] != la.PAD_KEY]
+        assert (np.diff(live) > 0).all()          # sorted, unique
+        if r + 1 < kk.shape[0]:
+            nxt = kk[r + 1][kk[r + 1] != la.PAD_KEY]
+            assert set(live).issubset(set(nxt))   # nested
+    bottom = kk[-1][kk[-1] != la.PAD_KEY]
+    np.testing.assert_array_equal(bottom, keys)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(10, 500), x=st.floats(0.5, 1.0),
+       y=st.floats(0.01, 0.5))
+def test_xy_workload_skew(n, x, y):
+    w = wl.xy_workload(n, x, y, 2000, seed=1)
+    assert len(w.populate) == n
+    assert set(w.keys).issubset(set(w.populate.tolist()))
+    # popular fraction of mass roughly >= x - slack
+    vals, cnt = np.unique(w.keys, return_counts=True)
+    top = np.sort(cnt)[::-1]
+    n_pop = max(int(round(y * n)), 1)
+    assert top[:n_pop].sum() / 2000 > x - 0.15
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(0, 1 << 40), e=st.integers(0, 40),
+       s=st.integers(0, 1 << 25))
+def test_threshold_shift_equivalence(m, e, s):
+    from fractions import Fraction
+    assert (s <= Fraction(m, 2 ** e)) == (s <= (m >> e))
+    assert (s > Fraction(m, 2 ** e)) == (s > (m >> e))

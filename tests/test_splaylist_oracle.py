@@ -1,0 +1,123 @@
+"""Paper-invariant tests for the pure-Python splay-list oracle."""
+
+import math
+import random
+
+import pytest
+
+from repro.core.ref_py import SplayList
+from repro.core import workload as wl
+
+
+def test_set_semantics_fuzz():
+    rng = random.Random(11)
+    sl = SplayList(max_level=20, p=0.7, rng=random.Random(5))
+    model = set()
+    for i in range(15000):
+        k = rng.randrange(0, 400)
+        op = rng.random()
+        if op < 0.5:
+            assert sl.contains(k) == (k in model), (i, k)
+        elif op < 0.75:
+            assert sl.insert(k) == (k not in model), (i, k)
+            model.add(k)
+        else:
+            assert sl.delete(k) == (k in model), (i, k)
+            model.discard(k)
+    assert sl.size == len(model)
+
+
+def test_lemma1_no_ascent_invariant():
+    """Lemma 1: after each operation, no object satisfies the ascent
+    condition (checked at checkpoints through a skewed run)."""
+    sl = SplayList(max_level=24, p=1.0)
+    w = wl.xy_workload(300, 0.9, 0.1, 4000, seed=3)
+    for k in w.populate:
+        sl.insert(int(k))
+        assert not sl.check_no_ascent()
+    for i, k in enumerate(w.keys):
+        sl.contains(int(k))
+        if i % 500 == 0:
+            assert not sl.check_no_ascent(), i
+    assert not sl.check_no_ascent()
+
+
+def test_counters_interval_sum_consistency():
+    sl = SplayList(max_level=20, p=1.0)
+    rng = random.Random(0)
+    for k in range(0, 600, 2):
+        sl.insert(k)
+    for _ in range(3000):
+        sl.contains(rng.choice(range(0, 600, 2)))
+    assert sl.counters_ok()
+    for k in range(0, 300, 2):
+        sl.delete(k)
+    assert sl.counters_ok()
+    assert not sl.check_no_ascent()
+
+
+def test_lemma2_height_frequency_bound():
+    """No-ascent implies sh_u <= m / 2^(k - h_u - 1): every key's height
+    is calibrated to its frequency (the statically-optimal layout)."""
+    sl = SplayList(max_level=24, p=1.0)
+    w = wl.zipf_workload(500, 20000, seed=7)
+    for k in w.populate:
+        sl.insert(int(k))
+    for k in w.keys:
+        sl.contains(int(k))
+    k_lvl = sl.ML1 - sl.zero_level
+    m = sl.m
+    for node in sl.items():
+        h_rel = node.top_level - sl.zero_level
+        e = k_lvl - h_rel - 1
+        if e >= 0:
+            assert node.selfhits <= max(m >> e, 1), (
+                node.key, node.selfhits, h_rel)
+
+
+def test_path_length_adaptivity():
+    """Hot keys must have much shorter paths than cold keys, and within
+    the O(log(m / sh)) bound (constant from Theorem 5)."""
+    sl = SplayList(max_level=24, p=1.0)
+    w = wl.xy_workload(2000, 0.95, 0.05, 40000, seed=1)
+    for k in w.populate:
+        sl.insert(int(k))
+    for k in w.keys:
+        sl.contains(int(k))
+    hot, cold = [], []
+    for node in list(sl.items())[::7]:
+        _, steps = sl.find(node.key)
+        bound = 8 * (3 + math.log2(max(sl.m / max(node.selfhits, 1), 2)))
+        assert steps <= 2 * bound, (node.key, steps, bound)
+        (hot if node.selfhits > 50 else cold).append(steps)
+    if hot and cold:
+        assert sum(hot) / len(hot) < sum(cold) / len(cold)
+
+
+def test_rebuild_triggers_and_preserves():
+    sl = SplayList(max_level=20, p=1.0)
+    for k in range(200):
+        sl.insert(k)
+    for k in range(150):
+        sl.delete(k)
+    assert sl.rebuilds >= 1
+    for k in range(150):
+        assert not sl.contains(k)
+    for k in range(150, 200):
+        assert sl.contains(k)
+    assert sl.counters_ok()
+    assert not sl.check_no_ascent()
+    assert sl.m == sum(n.selfhits for n in sl.items())
+
+
+def test_relaxed_preserves_invariant():
+    """Section 4: a skipped update leaves all conditions untouched."""
+    sl = SplayList(max_level=20, p=0.05, rng=random.Random(2))
+    rng = random.Random(9)
+    for k in range(0, 500, 5):
+        sl.insert(k)
+    for i in range(5000):
+        sl.contains(rng.randrange(0, 500))
+        if i % 1000 == 0:
+            assert not sl.check_no_ascent()
+            assert sl.counters_ok()

@@ -1,0 +1,87 @@
+"""End-to-end behaviour tests: trainer loop with checkpoint/resume, and
+the relaxed splay-list reproducing the paper's qualitative claims."""
+
+import numpy as np
+
+from repro.core.ref_py import SplayList
+from repro.core.skiplist import SkipList
+from repro.core import workload as wl
+from repro.launch import train as train_mod
+
+
+def test_trainer_runs_and_resumes(tmp_path):
+    losses = train_mod.main([
+        "--arch", "qwen2-0.5b", "--smoke", "--steps", "8",
+        "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+        "--log-every", "100"])
+    assert len(losses) == 8
+    assert all(np.isfinite(losses))
+    # resume continues from the persisted step
+    losses2 = train_mod.main([
+        "--arch", "qwen2-0.5b", "--smoke", "--steps", "10",
+        "--ckpt-dir", str(tmp_path), "--ckpt-every", "4",
+        "--log-every", "100"])
+    assert len(losses2) == 2      # only steps 8..9 rerun
+
+
+def test_trainer_with_compression(tmp_path):
+    losses = train_mod.main([
+        "--arch", "stablelm-3b", "--smoke", "--steps", "4",
+        "--compress", "int8", "--log-every", "100"])
+    assert all(np.isfinite(losses))
+
+
+def test_paper_claim_splay_beats_skiplist_on_skew():
+    """Tables 1-3 structure: on 99-1, the splay-list's average path is
+    far below the skip-list's; on uniform it is not better."""
+    n, ops = 3000, 30000
+    w = wl.xy_workload(n, 0.99, 0.01, ops, seed=5)
+    sl = SplayList(max_level=22, p=1.0)
+    sk = SkipList(max_level=22)
+    for k in w.populate:
+        sl.insert(int(k))
+        sk.insert(int(k))
+    p_sl = p_sk = 0
+    for k in w.keys:
+        sl.contains(int(k))
+        p_sl += sl.last_path_len
+        sk.find(int(k))
+        p_sk += sk.last_path_len
+    assert p_sl / ops < 0.6 * (p_sk / ops), (p_sl / ops, p_sk / ops)
+
+    wu = wl.uniform_workload(n, 5000, seed=6)
+    sl2 = SplayList(max_level=22, p=1.0)
+    sk2 = SkipList(max_level=22)
+    for k in wu.populate:
+        sl2.insert(int(k))
+        sk2.insert(int(k))
+    pu_sl = pu_sk = 0
+    for k in wu.keys:
+        sl2.contains(int(k))
+        pu_sl += sl2.last_path_len
+        sk2.find(int(k))
+        pu_sk += sk2.last_path_len
+    # uniform: the *adaptivity advantage* must shrink vs the skewed case
+    # (paper Fig 11 — note a deterministic splay-list still beats a
+    # RANDOMIZED skip-list on raw path length even without skew; the
+    # paper's uniform-workload loss is balancing overhead, not paths)
+    assert (pu_sl / pu_sk) > (p_sl / p_sk) + 0.1
+
+
+def test_paper_claim_relaxation_tradeoff():
+    """Theorem 8 / Tables 1-3: p=1/10 keeps paths within a small factor
+    of exact counting."""
+    n, ops = 2000, 20000
+    w = wl.xy_workload(n, 0.9, 0.1, ops, seed=8)
+    paths = {}
+    for p in (1.0, 0.1):
+        sl = SplayList(max_level=22, p=p)
+        for k in w.populate:
+            sl.insert(int(k))
+        tot = 0
+        coins = np.random.default_rng(0).random(ops) < p
+        for k, coin in zip(w.keys, coins):
+            sl.contains(int(k), upd=bool(coin))
+            tot += sl.last_path_len
+        paths[p] = tot / ops
+    assert paths[0.1] < 1.5 * paths[1.0], paths
