@@ -1,0 +1,18 @@
+# Tier-1 verification and smoke benchmarks (see ROADMAP.md / DESIGN.md).
+
+PY ?= python
+export PYTHONPATH := src:.
+
+.PHONY: test bench-smoke bench
+
+# tier-1: the full pytest suite (ROADMAP "Tier-1 verify")
+test:
+	$(PY) -m pytest -x -q
+
+# quick perf smoke: kernel race + aggregation; writes BENCH_kernels.json
+bench-smoke:
+	$(PY) benchmarks/run.py --only kernels_bench
+
+# full benchmark harness (paper-scale sizes)
+bench:
+	$(PY) benchmarks/run.py --full

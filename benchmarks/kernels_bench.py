@@ -1,52 +1,173 @@
 """Kernel micro-benchmarks (CPU: interpret-mode correctness path; the
-derived column carries the structural metrics that transfer to TPU —
-hot-tier hit level and bytes-touched ratios)."""
+derived columns carry the structural metrics that transfer to TPU).
+
+Races the tiered splay-search pipeline (per-row streaming + rank-windowed
+descent, DESIGN.md §5.2) against the retained seed kernel
+(``splay_search_full``: whole level matrix as one resident block,
+full-width compare per level) on Zipf query batches, and measures the
+batched-update aggregation (one weighted fold per unique key).
+
+Emits the usual CSV lines AND returns a machine-readable payload which
+``benchmarks/run.py`` writes to ``BENCH_kernels.json`` (op/s, per-level
+bytes-touched model, config) so the perf trajectory is tracked across
+PRs.
+"""
 
 from __future__ import annotations
 
+import json
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
 from repro.core import level_arrays as la
-from repro.kernels import ref
+from repro.core import splaylist as sx
+from repro.core import workload as wl
+from repro.kernels import ops
+
+ALPHAS = (0.6, 1.0, 1.4)
 
 
-def run(quick: bool = False):
-    rng = np.random.default_rng(0)
-    n = 20_000 if quick else 100_000
-    nq = 4096
-    keys = np.sort(rng.choice(4 * n, n, replace=False)).astype(np.int32)
-    # zipf-ish heights: top 1% at height 5
-    ranks = np.argsort(rng.permutation(n))
-    heights = np.clip(5 - np.log2(1 + ranks / (n * 0.01)), 0,
-                      5).astype(np.int32)
-    L = la.build(keys, heights, min_levels=6)
-    hot_keys = keys[heights >= 4]
-    qs_hot = rng.choice(hot_keys, nq).astype(np.int32)
-    qs_cold = rng.choice(keys, nq).astype(np.int32)
+def _zipf_case(width: int, alpha: float, nq: int, seed: int = 0):
+    keys, heights, qs = wl.zipf_level_fixture(width, alpha, nq, seed)
+    return la.build(keys, heights, min_levels=6), qs
 
-    lvk = jnp.asarray(L.keys)
-    f = jax.jit(ref.splay_search_ref)
-    f(lvk, jnp.asarray(qs_hot))[0].block_until_ready()
+
+def _time(fn, reps: int) -> float:
+    out = fn()
+    out[0].block_until_ready()
     t0 = time.perf_counter()
-    for _ in range(10):
-        out = f(lvk, jnp.asarray(qs_hot))
+    for _ in range(reps):
+        out = fn()
         out[0].block_until_ready()
-    dt = (time.perf_counter() - t0) / 10
-    _, _, lv_hot = out
-    _, _, lv_cold = f(lvk, jnp.asarray(qs_cold))
-    emit("kernel_splay_search_vec", dt / nq * 1e6,
-         f"hot_level={float(jnp.mean(lv_hot)):.2f};"
-         f"cold_level={float(jnp.mean(lv_cold)):.2f};"
-         f"top_rows_bytes={int(L.widths[:3].sum())*4}")
+    return (time.perf_counter() - t0) / reps
 
-    # hot_gather: bytes-touched model (hot hits avoid HBM entirely);
-    # the hot set comes from observed counts, as the splay heights do
-    v, h, d = n, 2048, 512
+
+def _bytes_model(L: la.LevelArrays, query_block: int, nq: int) -> dict:
+    """Per-level bytes-touched estimate for one full batch of nq queries.
+
+    seed kernel: the whole [L, W] matrix is one constant block — it is
+    fetched once and must stay VMEM-resident; every level row is compared
+    full-width by every query.
+
+    tiered kernel: one (1, W) level row + one (1, W) rank-map row stream
+    per (query block, live level); statically-empty rows are aliased away
+    by the fetch schedule; per-query compares are O(log window) probes.
+    """
+    n_levels, width = L.keys.shape
+    itemsize = 4
+    q_blocks = max(nq // query_block, 1)
+    live = int((L.widths > 0).sum())
+    per_level_bytes = [int(width * itemsize) for _ in range(n_levels)]
+    seed_resident = n_levels * width * itemsize
+    tiered_streamed = q_blocks * live * 2 * width * itemsize
+    return {
+        "n_levels": n_levels,
+        "width": width,
+        "live_levels": live,
+        "per_level_row_bytes": per_level_bytes,
+        "seed_vmem_resident_bytes": seed_resident,
+        "tiered_vmem_resident_bytes": 2 * width * itemsize,
+        "tiered_streamed_bytes_per_batch": tiered_streamed,
+        "seed_compares_per_query": n_levels * width,
+        "tiered_probes_per_query":
+            int(n_levels * (max(int(width).bit_length(), 1))),
+    }
+
+
+def _aggregation_case(quick: bool) -> dict:
+    """Duplicate-heavy batch through run_contains_batch with and without
+    aggregation: folds collapse to the unique-key count, results match."""
+    rng = np.random.default_rng(1)
+    n_keys = 64 if quick else 256
+    B = 512 if quick else 2048
+    pool = np.arange(0, 2 * n_keys, 2, dtype=np.int32)
+    st = sx.make(capacity=2 * n_keys + 8, max_level=16)
+    st, _, _ = sx.run_ops(
+        st, jnp.full((n_keys,), sx.OP_INSERT, jnp.int32),
+        jnp.asarray(pool), jnp.ones((n_keys,), bool))
+    hot = pool[: max(n_keys // 16, 1)]
+    qs = np.where(rng.random(B) < 0.8, rng.choice(hot, B),
+                  rng.choice(pool, B)).astype(np.int32)
+    coins = rng.random(B) < 0.75
+    n_folds_serial = int(coins.sum())
+    n_folds_agg = len(np.unique(qs[coins]))
+
+    t_ser = _time(lambda: sx.run_contains_batch(
+        st, jnp.asarray(qs), jnp.asarray(coins))[1:], reps=3)
+    t_agg = _time(lambda: sx.run_contains_batch(
+        st, jnp.asarray(qs), jnp.asarray(coins), aggregate=True)[1:],
+        reps=3)
+    _, res_s, _ = sx.run_contains_batch(st, jnp.asarray(qs),
+                                        jnp.asarray(coins))
+    _, res_a, _ = sx.run_contains_batch(st, jnp.asarray(qs),
+                                        jnp.asarray(coins), aggregate=True)
+    assert (np.asarray(res_s) == np.asarray(res_a)).all()
+    emit("batch_update_aggregation", t_agg / B * 1e6,
+         f"folds_serial={n_folds_serial};folds_agg={n_folds_agg};"
+         f"speedup={t_ser / t_agg:.2f}")
+    return {
+        "batch": B,
+        "unique_update_keys": n_folds_agg,
+        "folds_serialized": n_folds_serial,
+        "folds_aggregated": n_folds_agg,
+        "us_per_op_serialized": t_ser / B * 1e6,
+        "us_per_op_aggregated": t_agg / B * 1e6,
+        "speedup": t_ser / t_agg,
+    }
+
+
+def run(quick: bool = False) -> dict:
+    width = 4096 if quick else 8192
+    nq = 1024 if quick else 4096
+    qb = 256
+    reps = 3 if quick else 5
+
+    payload = {
+        "bench": "kernels",
+        "config": {"width": width, "nq": nq, "query_block": qb,
+                   "alphas": list(ALPHAS), "quick": quick,
+                   "mode": "interpret-cpu"},
+        "zipf_search": [],
+    }
+    for alpha in ALPHAS:
+        L, qs = _zipf_case(width, alpha, nq, seed=int(alpha * 10))
+        lvk = jnp.asarray(L.keys)
+        rm = jnp.asarray(L.rank_map)
+        w = jnp.asarray(L.widths)
+        qsj = jnp.asarray(qs)
+        dt_tier = _time(lambda: ops.splay_search(
+            lvk, qsj, query_block=qb, rank_map=rm, widths=w), reps)
+        dt_full = _time(lambda: ops.splay_search_full(
+            lvk, qsj, query_block=qb), reps)
+        out_t = ops.splay_search(lvk, qsj, query_block=qb,
+                                 rank_map=rm, widths=w)
+        out_f = ops.splay_search_full(lvk, qsj, query_block=qb)
+        for a, b in zip(out_t, out_f):
+            assert (np.asarray(a) == np.asarray(b)).all()
+        _, _, lv = out_t
+        mean_lv = float(jnp.mean(lv))
+        emit(f"kernel_splay_search_tiered_a{alpha}", dt_tier / nq * 1e6,
+             f"full_us={dt_full / nq * 1e6:.3f};"
+             f"speedup={dt_full / dt_tier:.2f};mean_level={mean_lv:.2f}")
+        payload["zipf_search"].append({
+            "alpha": alpha,
+            "ops_per_sec_tiered": nq / dt_tier,
+            "ops_per_sec_seed": nq / dt_full,
+            "us_per_query_tiered": dt_tier / nq * 1e6,
+            "us_per_query_seed": dt_full / nq * 1e6,
+            "speedup": dt_full / dt_tier,
+            "mean_level_found": mean_lv,
+        })
+    payload["bytes_model"] = _bytes_model(L, qb, nq)
+    payload["aggregation"] = _aggregation_case(quick)
+
+    # hot_gather: bytes-touched model (hot hits avoid HBM entirely); the
+    # hot set comes from observed counts, as the splay heights do
+    rng = np.random.default_rng(0)
+    v, h, d = width, 2048, 512
     from repro.core.workload import zipf_token_ids
     warm = zipf_token_ids(rng, v, (8 * nq,))
     counts = np.bincount(warm.ravel(), minlength=v)
@@ -55,13 +176,18 @@ def run(quick: bool = False):
     hot_rank[hot_ids] = np.arange(h)
     ids = zipf_token_ids(rng, v, (nq,))
     hit = float(np.mean(hot_rank[ids] >= 0))
-    hbm_bytes_tiered = (1 - hit) * nq * d * 2
-    hbm_bytes_flat = nq * d * 2
     emit("kernel_hot_gather_model", 0.0,
-         f"zipf_hot_hit={hit:.2f};"
-         f"hbm_bytes_saved={1-hbm_bytes_tiered/hbm_bytes_flat:.2f}")
-    return {"hot_hit": hit}
+         f"zipf_hot_hit={hit:.2f};hbm_bytes_saved={hit:.2f}")
+    payload["hot_gather_model"] = {
+        "vocab": v, "hot_rows": h, "dim": d, "zipf_hot_hit": hit,
+        "hbm_bytes_flat": nq * d * 2,
+        "hbm_bytes_tiered": int((1 - hit) * nq * d * 2),
+    }
+    return payload
 
 
 if __name__ == "__main__":
-    run(quick=True)
+    out = run(quick=True)
+    with open("BENCH_kernels.json", "w") as fh:
+        json.dump(out, fh, indent=2)
+    print(json.dumps(out["zipf_search"], indent=2))

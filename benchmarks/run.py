@@ -1,8 +1,13 @@
 """Benchmark harness entry point — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV.  --full for paper-scale sizes
-(1e5 keys); default is the quick profile used by bench_output.txt."""
+(1e5 keys); default is the quick profile used by bench_output.txt.
+
+Modules returning a payload with a ``bench`` key additionally get it
+written to ``BENCH_<name>.json`` (machine-readable op/s, bytes-touched
+models, config) so the perf trajectory is tracked across PRs."""
 
 import argparse
+import json
 import sys
 import time
 
@@ -36,10 +41,15 @@ def main() -> None:
         t0 = time.time()
         print(f"# --- {name} ---", flush=True)
         try:
-            fn()
+            payload = fn()
         except Exception as e:  # keep the harness going; report failure
             print(f"{name},FAILED,{type(e).__name__}:{e}", flush=True)
             raise
+        if isinstance(payload, dict) and payload.get("bench"):
+            out = f"BENCH_{payload['bench']}.json"
+            with open(out, "w") as fh:
+                json.dump(payload, fh, indent=2)
+            print(f"# wrote {out}", flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
 
 

@@ -44,10 +44,12 @@ def main():
           f"mean path={float(steps.mean()):.1f}")
 
     # --- 3. heights reflect popularity ----------------------------------
+    # duplicate-heavy batches: aggregate=True dedupes the keys and runs
+    # one weighted rebalance fold per unique key (DESIGN.md §2.1)
     hot = queries[:16]
     for _ in range(30):
         st, _, _ = sx.run_contains_batch(
-            st, hot, jnp.ones((16,), bool))
+            st, hot, jnp.ones((16,), bool), aggregate=True)
     h = sx.heights(st)
     hot_keys = [int(k) for k in np.asarray(hot)]
     hot_h = np.mean([h[k] for k in hot_keys])

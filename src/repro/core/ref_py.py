@@ -153,9 +153,14 @@ class SplayList:
 
     # -- the forward-pass update (search + counters + rebalance) -----------
 
-    def _update(self, key: int) -> Optional[Node]:
+    def _update(self, key: int, w: int = 1) -> Optional[Node]:
         """Forward-pass balancing (Section 5).  ``key`` must be physically
         present.  Returns the node with this key.
+
+        ``w`` is the hit weight: the aggregated-batch oracle (mirroring
+        ``splaylist.run_contains_batch(..., aggregate=True)``) folds w
+        identical hit-operations into one traversal by adding w wherever
+        the unit pass adds 1 (m, parent subtree counters, selfhits).
 
         Per level h (top -> bottom):
           - increment the hits counter of the parent of `key` at level h
@@ -168,7 +173,7 @@ class SplayList:
         Stops at the level where the key's node is found (all lower parents
         are the node itself).
         """
-        self.m += 1
+        self.m += w
         curr_m = self.m
         target = None
 
@@ -186,7 +191,7 @@ class SplayList:
                 else:
                     if pred.zero_level > h:
                         self._fill_down(pred, h)
-                    pred.hits[h] += 1
+                    pred.hits[h] += w
                 h -= 1
                 continue
 
@@ -196,13 +201,13 @@ class SplayList:
                 if nxt.key > key:
                     # curr is the parent of `key` at level h
                     if curr.key == key:
-                        curr.selfhits += 1
+                        curr.selfhits += w
                         target = curr
                         found_here = True
                     else:
                         if curr.zero_level > h:
                             self._fill_down(curr, h)
-                        curr.hits[h] += 1
+                        curr.hits[h] += w
 
                 # --- ascent condition (pseudocode lines 38-56) ----------
                 curh = curr.top_level

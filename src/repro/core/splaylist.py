@@ -184,11 +184,18 @@ def find_batch(st: SplayState, ks) -> Tuple[jax.Array, jax.Array]:
 # the forward-pass update (counters + ascent/descent), Section 5
 # ---------------------------------------------------------------------------
 
-def _update(st: SplayState, k) -> SplayState:
-    """Forward-pass rebalance for a physically-present key k."""
+def _update(st: SplayState, k, w=None) -> SplayState:
+    """Forward-pass rebalance for a physically-present key k.
+
+    ``w`` is the hit weight (default 1): the batched-update aggregation
+    of ``run_contains_batch(..., aggregate=True)`` folds ``w`` identical
+    hit-operations into ONE traversal by adding ``w`` everywhere the
+    unit pass adds 1 (m, the parent subtree counters, selfhits).  The
+    ascent/descent checks then see the epoch-final counters — the
+    flat-combining analogue of the paper's combined update phase."""
     L = st.max_level
     ml1 = L - 1
-    one = jnp.ones((), st.m.dtype)
+    one = jnp.ones((), st.m.dtype) if w is None else w.astype(st.m.dtype)
     st = st._replace(m=st.m + one)
     curr_m = st.m
 
@@ -588,19 +595,58 @@ def run_ops(st: SplayState, kinds, keys, upd_mask):
     return st, res, plen
 
 
-@jax.jit
-def run_contains_batch(st: SplayState, keys, upd_mask):
+@functools.partial(jax.jit, static_argnames=("aggregate",))
+def run_contains_batch(st: SplayState, keys, upd_mask,
+                       aggregate: bool = False):
     """The concurrent-execution analogue (DESIGN.md §2): a batch of B
     lock-free searches evaluated in parallel (vmap) against the state
     snapshot, followed by the serialized update fold for the subsampled
     updaters (hand-over-hand locking guarantees exactly this total order
     in the C++ version).  Rebuild is deferred to the batch boundary so
     marked-but-visited keys stay physically present for the whole batch.
+
+    ``aggregate=True`` (DESIGN.md §2.1) switches the fold to the batched
+    aggregation mode: the key batch is deduplicated (sort + segment
+    sums), per-key hit counts accumulate into a weight, and ONE weighted
+    rebalance fold runs per *unique* key (in ascending key order) instead
+    of one per operation — the flat-combining analogue of the paper's
+    combined update phase.  On a duplicate-free batch this performs
+    exactly the per-op folds of the serialized mode, just in sorted key
+    order.  Search results are computed against the snapshot either way.
     Returns (state, results[B], steps[B])."""
     slots, steps = find_batch(st, keys)
     present = slots >= 0
     marked = present & st.deleted[jnp.maximum(slots, 0)]
     one = jnp.ones((), st.m.dtype)
+
+    if aggregate:
+        B = keys.shape[0]
+        cdt = st.m.dtype
+        order = jnp.argsort(keys)
+        ks = keys[order]
+        do = (upd_mask & present)[order]
+        mk = marked[order]
+        first = jnp.concatenate(
+            [jnp.ones((1,), bool), ks[1:] != ks[:-1]])
+        seg = jnp.cumsum(first.astype(jnp.int32)) - 1
+        w = jax.ops.segment_sum(do.astype(cdt), seg, num_segments=B)
+        wm = jax.ops.segment_sum((do & mk).astype(cdt), seg,
+                                 num_segments=B)
+        uk = jax.ops.segment_min(ks, seg, num_segments=B)
+
+        def agg_step(s, op):
+            k, wk, wmk = op
+
+            def u(x):
+                x = _update(x, k, wk)
+                return x._replace(dhits=x.dhits + wmk)
+
+            s = jax.lax.cond(wk > 0, u, lambda x: x, s)
+            return s, ()
+
+        st, _ = jax.lax.scan(agg_step, st, (uk, w, wm))
+        st = _maybe_rebuild(st)
+        return st, present & ~marked, steps
 
     def upd_step(s, op):
         k, do, pres, mk = op

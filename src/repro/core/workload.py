@@ -116,3 +116,27 @@ def zipf_token_ids(rng: np.random.Generator, vocab: int, shape,
     probs /= probs.sum()
     draws = rng.choice(v, size=int(np.prod(shape)), p=probs)
     return draws.reshape(shape).astype(np.int32)
+
+
+def zipf_level_fixture(width: int, alpha: float, nq: int, seed: int = 0):
+    """Splay-shaped level arrays + an aligned Zipf(alpha) query batch.
+
+    Heights follow the paper's calibration (top ~1% of ranks at height 5,
+    halving per level); queries sample keys by the same rank order, so hot
+    queries hit tall keys exactly as a converged splay-list would arrange.
+    Shared by the kernel acceptance tests and benchmarks/kernels_bench so
+    the benchmark races what the tests validate.  Returns (keys [width],
+    heights [width], queries [nq]) — feed keys/heights to
+    ``level_arrays.build``.
+    """
+    rng = np.random.default_rng(seed)
+    n = width
+    keys = np.sort(rng.choice(20 * n, n, replace=False)).astype(np.int32)
+    ranks = np.argsort(rng.permutation(n))
+    heights = np.clip(5 - np.log2(1 + ranks / (n * 0.01)), 0,
+                      5).astype(np.int32)
+    p = 1.0 / (1 + np.arange(n)) ** alpha
+    p /= p.sum()
+    key_by_rank = keys[np.argsort(ranks)]
+    qs = rng.choice(key_by_rank, nq, p=p).astype(np.int32)
+    return keys, heights, qs

@@ -16,14 +16,22 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def splay_search(level_keys, queries, query_block: int = 256):
-    """Batched level-array search (see kernels/splay_search.py)."""
-    pad = (-queries.shape[0]) % query_block
-    q = jnp.pad(queries, (0, pad), constant_values=ssk.PAD_KEY - 1)
-    found, rank, lvl = ssk.splay_search(
-        level_keys, q, query_block=query_block, interpret=not on_tpu())
-    n = queries.shape[0]
-    return found[:n], rank[:n], lvl[:n]
+def splay_search(level_keys, queries, query_block: int = 256,
+                 rank_map=None, widths=None):
+    """Batched level-array search (see kernels/splay_search.py).  Queries
+    of any length (the kernel wrapper pads to the block multiple and
+    slices back).  Pass a ``LevelArrays``' rank_map/widths to skip the
+    on-the-fly window derivation."""
+    return ssk.splay_search(
+        level_keys, queries, query_block=query_block,
+        interpret=not on_tpu(), rank_map=rank_map, widths=widths)
+
+
+def splay_search_full(level_keys, queries, query_block: int = 256):
+    """Seed baseline kernel (whole level matrix as one resident block)."""
+    return ssk.splay_search_full(
+        level_keys, queries, query_block=query_block,
+        interpret=not on_tpu())
 
 
 @functools.partial(jax.jit, static_argnames=())

@@ -1,18 +1,34 @@
-"""Pallas TPU kernel: batched splay-list search over level arrays.
+"""Pallas TPU kernels: batched splay-list search over level arrays.
 
 TPU adaptation of the paper's search phase (DESIGN.md §5): instead of
 pointer chasing, each splay level is a dense sorted row; a query block
-compares against rows top-down (row 0 = hottest).  Two properties carry
-the splay-list's distribution-adaptivity to the TPU:
+compares against rows top-down (row 0 = hottest).
 
-  * hot keys resolve in the first (tiny, VMEM-resident) rows — the
-    short-access-path property;
-  * once every query in the block has resolved, remaining (wide, cold)
-    rows are skipped entirely via @pl.when — whole HBM tiles never move,
-    the memory-traffic analogue of not walking the cold list.
+Two kernels live here:
 
-Grid: (query_blocks,).  BlockSpecs: queries tiled [QB]; the level matrix
-is tiled per level row [1, width] so only touched rows stream into VMEM.
+``splay_search`` — the tiered pipeline (DESIGN.md §5.2).  Grid
+``(query_blocks, n_levels)``; the level matrix and the rank map are tiled
+*per row* (``pl.BlockSpec((1, width), ...)``), so exactly one row is VMEM
+resident at a time and the footprint is O(W) instead of O(L·W).  The row
+index_map goes through a scalar-prefetched fetch schedule that aliases
+statically-empty rows (padding above the tallest key) to the next live
+row — consecutive identical block indices suppress the duplicate DMA.
+Within a row the full-width ``row <= q`` compare is replaced by
+rank-windowed descent: the predecessor index ``p`` found at level r bounds
+the level-r+1 predecessor inside ``[rank_map[r, p], rank_map[r, p + 1])``
+(rows are nested), and a masked binary refinement locates it in
+O(log window) probes instead of O(W) compares.  The ``[lo, hi)`` window
+is carried across grid steps in VMEM scratch; ``found``/``level_found``
+accumulate in revisited output blocks.
+
+``splay_search_full`` — the seed kernel, kept as the measured baseline:
+it declares the whole ``[n_levels, width]`` matrix as one constant block
+(entire matrix resident; full-width compare per level) and can only skip
+cold-row *compute*, never their residency.  ``benchmarks/kernels_bench``
+races the two and emits the bytes-touched model.
+
+Both wrappers pad the query batch to the block multiple internally and
+slice the outputs back — callers never pre-pad.
 """
 
 from __future__ import annotations
@@ -22,13 +38,172 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 PAD_KEY = 2 ** 31 - 1
 DEFAULT_QUERY_BLOCK = 256
 
 
-def _kernel(q_ref, lv_ref, found_ref, rank_ref, level_ref, *,
-            n_levels: int):
+def rank_windows(level_keys):
+    """rank_map[r, j] = index of level_keys[r, j] in row r+1 (identity on
+    the bottom row; pad entries map to the next row's live width).  The
+    jnp fallback for callers that did not precompute it host-side in
+    ``LevelArrays.build``."""
+    n_levels, width = level_keys.shape
+    ident = jnp.arange(width, dtype=jnp.int32)[None, :]
+    if n_levels == 1:
+        return ident
+    rm = jax.vmap(
+        lambda nxt, row: jnp.searchsorted(nxt, row, side="left"))(
+            level_keys[1:], level_keys[:-1])
+    return jnp.concatenate([rm.astype(jnp.int32), ident], axis=0)
+
+
+def row_widths(level_keys):
+    """Live entries per row (rows are +INF padded)."""
+    return jnp.sum(level_keys != PAD_KEY, axis=1).astype(jnp.int32)
+
+
+def _fetch_schedule(widths, n_levels):
+    """fetch[r] = r if row r is live else the next live row below it —
+    empty rows alias their successor's block so the pipeline issues no
+    DMA for them (same block index on consecutive steps)."""
+    rows = jnp.arange(n_levels, dtype=jnp.int32)
+    cand = jnp.where(widths > 0, rows, n_levels - 1)
+    return jax.lax.associative_scan(jnp.minimum, cand, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# tiered kernel: per-row streaming + rank-windowed descent
+# ---------------------------------------------------------------------------
+
+def _kernel_tiered(fetch_ref, widths_ref, q_ref, row_ref, rm_ref,
+                   found_ref, rank_ref, level_ref, lo_ref, hi_ref, *,
+                   n_levels: int, width: int, n_steps: int):
+    del fetch_ref  # consumed by the index_maps only
+    r = pl.program_id(1)
+    q = q_ref[...]                                     # [QB]
+    qb = q.shape[0]
+
+    @pl.when(r == 0)
+    def _init():
+        found_ref[...] = jnp.zeros((qb,), jnp.bool_)
+        level_ref[...] = jnp.full((qb,), n_levels, jnp.int32)
+        rank_ref[...] = jnp.zeros((qb,), jnp.int32)
+        lo_ref[...] = jnp.full((qb,), -1, jnp.int32)
+        hi_ref[...] = jnp.full((qb,), widths_ref[0], jnp.int32)
+
+    row = row_ref[0, :]                                # [W] (one level row)
+
+    # Masked binary refinement inside the inherited rank window [lo, hi):
+    # invariant row[lo] <= q (lo == -1: virtual -inf) and row[hi] > q
+    # (hi >= live width: +INF padding).  All probes are [QB] gathers.
+    def step(_, c):
+        lo, hi = c
+        active = hi - lo > 1
+        mid = (lo + hi) // 2
+        vals = jnp.take(row, jnp.clip(mid, 0, width - 1))
+        le = vals <= q
+        lo2 = jnp.where(active & le, mid, lo)
+        hi2 = jnp.where(active & ~le, mid, hi)
+        return lo2, hi2
+
+    p, _ = jax.lax.fori_loop(0, n_steps, step, (lo_ref[...], hi_ref[...]))
+
+    pred = jnp.take(row, jnp.clip(p, 0, width - 1))
+    hit = (p >= 0) & (pred == q)
+    found = found_ref[...]
+    level_ref[...] = jnp.where(hit & ~found, r, level_ref[...])
+    found_ref[...] = found | hit
+
+    @pl.when(r == n_levels - 1)
+    def _emit_rank():
+        rank_ref[...] = p                              # bottom-row rank
+
+    @pl.when(r < n_levels - 1)
+    def _descend():
+        # Window for the next row: the nested-rows invariant puts the
+        # level-(r+1) predecessor inside [rank_map[p], rank_map[p + 1]).
+        rm = rm_ref[0, :]
+        row_empty = widths_ref[r] == 0
+        next_w = widths_ref[jnp.minimum(r + 1, n_levels - 1)]
+        lo_n = jnp.where(p >= 0, jnp.take(rm, jnp.clip(p, 0, width - 1)),
+                         -1)
+        hi_n = jnp.where((p + 1 >= width) | row_empty, next_w,
+                         jnp.take(rm, jnp.clip(p + 1, 0, width - 1)))
+        lo_ref[...] = lo_n
+        hi_ref[...] = hi_n
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("query_block", "interpret"))
+def splay_search(level_keys, queries, query_block: int =
+                 DEFAULT_QUERY_BLOCK, interpret: bool = True,
+                 rank_map=None, widths=None):
+    """Tiered batched search.  level_keys int32 [n_levels, width] (sorted
+    rows, +INF padded, nested); queries int32 [q] (any length — padded to
+    the block multiple internally).  rank_map/widths: precomputed
+    ``LevelArrays`` companions (derived on the fly when omitted).
+    Returns (found [q] bool, rank [q] int32, level_found [q] int32)."""
+    n_levels, width = level_keys.shape
+    nq = queries.shape[0]
+    if nq == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return jnp.zeros((0,), jnp.bool_), z, z
+    pad = (-nq) % query_block
+    if pad:
+        queries = jnp.pad(queries, (0, pad), constant_values=PAD_KEY - 1)
+    nq_p = nq + pad
+
+    if rank_map is None:
+        rank_map = rank_windows(level_keys)
+    if widths is None:
+        widths = row_widths(level_keys)
+    fetch = _fetch_schedule(widths, n_levels)
+
+    n_steps = max(int(width + 1).bit_length(), 1)
+    rm_top = max(n_levels - 2, 0)
+    kernel = functools.partial(_kernel_tiered, n_levels=n_levels,
+                               width=width, n_steps=n_steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nq_p // query_block, n_levels),
+        in_specs=[
+            pl.BlockSpec((query_block,), lambda i, r, f, w: (i,)),
+            pl.BlockSpec((1, width), lambda i, r, f, w: (f[r], 0)),
+            pl.BlockSpec((1, width),
+                         lambda i, r, f, w: (jnp.minimum(f[r], rm_top), 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((query_block,), lambda i, r, f, w: (i,)),
+            pl.BlockSpec((query_block,), lambda i, r, f, w: (i,)),
+            pl.BlockSpec((query_block,), lambda i, r, f, w: (i,)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((query_block,), jnp.int32),     # lo (window start)
+            pltpu.VMEM((query_block,), jnp.int32),     # hi (window end)
+        ],
+    )
+    out_shapes = (
+        jax.ShapeDtypeStruct((nq_p,), jnp.bool_),
+        jax.ShapeDtypeStruct((nq_p,), jnp.int32),
+        jax.ShapeDtypeStruct((nq_p,), jnp.int32),
+    )
+    found, rank, lvl = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(fetch, widths, queries, level_keys, rank_map)
+    return found[:nq], rank[:nq], lvl[:nq]
+
+
+# ---------------------------------------------------------------------------
+# seed kernel (baseline): whole matrix as one constant block
+# ---------------------------------------------------------------------------
+
+def _kernel_full(q_ref, lv_ref, found_ref, rank_ref, level_ref, *,
+                 n_levels: int):
     q = q_ref[...]                                    # [QB]
     qb = q.shape[0]
     found = jnp.zeros((qb,), jnp.bool_)
@@ -73,23 +248,29 @@ def _kernel(q_ref, lv_ref, found_ref, rank_ref, level_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("query_block", "interpret"))
-def splay_search(level_keys, queries, query_block: int =
-                 DEFAULT_QUERY_BLOCK, interpret: bool = True):
-    """Batched search.  level_keys int32 [n_levels, width] (sorted rows,
-    +INF padded, nested); queries int32 [q] (q % query_block == 0).
-    Returns (found [q] bool, rank [q] int32, level_found [q] int32)."""
+def splay_search_full(level_keys, queries, query_block: int =
+                      DEFAULT_QUERY_BLOCK, interpret: bool = True):
+    """Seed baseline: the full [n_levels, width] matrix is a single
+    constant-index block (always resident; O(L·W) compare per query
+    block).  Queries of any length — padded internally."""
     n_levels, width = level_keys.shape
     nq = queries.shape[0]
-    assert nq % query_block == 0, (nq, query_block)
-    grid = (nq // query_block,)
+    if nq == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return jnp.zeros((0,), jnp.bool_), z, z
+    pad = (-nq) % query_block
+    if pad:
+        queries = jnp.pad(queries, (0, pad), constant_values=PAD_KEY - 1)
+    nq_p = nq + pad
+    grid = (nq_p // query_block,)
 
-    kernel = functools.partial(_kernel, n_levels=n_levels)
+    kernel = functools.partial(_kernel_full, n_levels=n_levels)
     out_shapes = (
-        jax.ShapeDtypeStruct((nq,), jnp.bool_),
-        jax.ShapeDtypeStruct((nq,), jnp.int32),
-        jax.ShapeDtypeStruct((nq,), jnp.int32),
+        jax.ShapeDtypeStruct((nq_p,), jnp.bool_),
+        jax.ShapeDtypeStruct((nq_p,), jnp.int32),
+        jax.ShapeDtypeStruct((nq_p,), jnp.int32),
     )
-    return pl.pallas_call(
+    found, rank, lvl = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -104,3 +285,4 @@ def splay_search(level_keys, queries, query_block: int =
         out_shape=out_shapes,
         interpret=interpret,
     )(queries, level_keys)
+    return found[:nq], rank[:nq], lvl[:nq]

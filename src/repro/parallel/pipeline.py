@@ -20,6 +20,20 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# newer jax exposes jax.shard_map; the replication-check kwarg was renamed
+# check_rep -> check_vma along the way, so key the choice off the actual
+# signature rather than the attribute (0.5.x has jax.shard_map+check_rep)
+import inspect
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - exercised on jax 0.4.x only
+    from jax.experimental.shard_map import shard_map as _shard_map
+_SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else {"check_rep": False})
+
 
 def pipeline_forward(x, stage_params, stage_fn: Callable, mesh,
                      n_microbatches: int, axis: str = "pod"):
@@ -75,10 +89,10 @@ def pipeline_forward(x, stage_params, stage_fn: Callable, mesh,
 
     spec_x = P()          # batch replicated across the pipe axis
     spec_p = P(axis)
-    fn = jax.shard_map(
+    fn = _shard_map(
         stage_worker, mesh=mesh,
         in_specs=(spec_p, spec_x), out_specs=spec_x,
-        check_vma=False)
+        **_SHARD_MAP_KW)
     return fn(stage_params, x)
 
 

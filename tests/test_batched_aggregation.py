@@ -1,0 +1,126 @@
+"""Batched-update aggregation (DESIGN.md §2.1): dedupe + weighted folds.
+
+The aggregated mode must be bit-exact against the Python oracle running
+the same weighted folds over sorted unique keys, and on duplicate-free
+batches it must equal the serialized fold modulo the canonical (sorted)
+combiner order.
+"""
+
+import collections
+import random
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ref_py
+from repro.core import splaylist as sx
+
+
+def _seed_engines(pool, ml=16, cap=256):
+    st = sx.make(capacity=cap, max_level=ml)
+    st, _, _ = sx.run_ops(
+        st, jnp.full((len(pool),), sx.OP_INSERT, jnp.int32),
+        jnp.asarray(np.array(pool, np.int32)),
+        jnp.ones((len(pool),), bool))
+    oracle = ref_py.SplayList(max_level=ml, p=1.0)
+    for k in pool:
+        oracle.insert(k, upd=True)
+    assert oracle.heights() == sx.heights(st)
+    return st, oracle
+
+
+def _oracle_aggregate(oracle, qs, coins, present):
+    """The reference combiner: per-key weights, one weighted fold per
+    unique present key, ascending key order.  Returns the fold count."""
+    wts = collections.Counter()
+    for q, c in zip(qs, coins):
+        if c and int(q) in present:
+            wts[int(q)] += 1
+    for k in sorted(wts):
+        oracle._update(k, w=wts[k])
+    return len(wts)
+
+
+def test_aggregated_bit_exact_duplicate_heavy():
+    rng = random.Random(7)
+    pool = list(range(0, 120, 2))
+    st0, oracle = _seed_engines(pool)
+
+    B = 256
+    hot = pool[:6]
+    qs = np.array([rng.choice(hot) if rng.random() < 0.8
+                   else rng.choice(pool + [1, 3]) for _ in range(B)],
+                  np.int32)
+    coins = np.array([rng.random() < 0.7 for _ in range(B)])
+
+    st_a, res, steps = sx.run_contains_batch(
+        st0, jnp.asarray(qs), jnp.asarray(coins), aggregate=True)
+
+    folds = _oracle_aggregate(oracle, qs, coins, set(pool))
+    n_upd_ops = sum(1 for q, c in zip(qs, coins) if c and int(q) in pool)
+    # duplicate-heavy: the fold count collapses to the unique-key count
+    assert folds < n_upd_ops / 3
+    assert folds == len({int(q) for q, c in zip(qs, coins)
+                         if c and int(q) in pool})
+
+    assert oracle.heights() == sx.heights(st_a)
+    assert oracle.m == int(st_a.m)
+    assert oracle.counters_ok()
+    # results/steps come from the snapshot, same as the serialized mode
+    _, steps_ref = sx.find_batch(st0, jnp.asarray(qs))
+    np.testing.assert_array_equal(np.asarray(steps), np.asarray(steps_ref))
+    exp = np.array([int(q) in pool for q in qs])
+    np.testing.assert_array_equal(np.asarray(res), exp)
+
+
+def test_aggregated_equals_serialized_on_deduplicated_stream():
+    """All-unique batch with weight 1 per key: the aggregated fold is the
+    serialized fold in ascending key order; the oracle replays exactly
+    that and must match bit-for-bit."""
+    rng = random.Random(13)
+    pool = list(range(0, 200, 2))
+    st0, oracle = _seed_engines(pool, ml=18, cap=512)
+
+    qs = np.array(rng.sample(pool, 48), np.int32)
+    coins = np.ones((len(qs),), bool)
+    st_a, res, _ = sx.run_contains_batch(
+        st0, jnp.asarray(qs), jnp.asarray(coins), aggregate=True)
+
+    for k in sorted(int(q) for q in qs):
+        oracle._update(k, w=1)
+    assert oracle.heights() == sx.heights(st_a)
+    assert oracle.m == int(st_a.m)
+    assert oracle.counters_ok()
+    assert bool(np.asarray(res).all())
+
+
+def test_weighted_fold_counts_mass_once():
+    """m grows by the total weight; selfhits of the target absorbs it."""
+    pool = [10, 20, 30]
+    st0, oracle = _seed_engines(pool)
+    qs = np.array([20] * 32, np.int32)
+    st_a, _, _ = sx.run_contains_batch(
+        st0, jnp.asarray(qs), jnp.ones((32,), bool), aggregate=True)
+    oracle._update(20, w=32)
+    assert int(st_a.m) == int(st0.m) + 32
+    assert oracle.m == int(st_a.m)
+    assert oracle.heights() == sx.heights(st_a)
+
+
+def test_aggregated_marked_keys_accumulate_dhits():
+    pool = list(range(0, 40, 2))
+    st0, _ = _seed_engines(pool)
+    # mark a key, then hammer it in aggregated mode
+    st0, ok, _ = sx.run_ops(
+        st0, jnp.asarray(np.array([sx.OP_DELETE], np.int32)),
+        jnp.asarray(np.array([4], np.int32)), jnp.ones((1,), bool))
+    assert bool(np.asarray(ok)[0])
+    dh0 = int(st0.dhits)
+    qs = np.array([4] * 8 + [6] * 8, np.int32)
+    st_a, res, _ = sx.run_contains_batch(
+        st0, jnp.asarray(qs), jnp.ones((16,), bool), aggregate=True)
+    # marked key: result False, dhits grew by its weight (8) — unless the
+    # deferred rebuild fired at the batch boundary and reset them
+    np.testing.assert_array_equal(
+        np.asarray(res), np.array([False] * 8 + [True] * 8))
+    assert int(st_a.dhits) in (0, dh0 + 8)

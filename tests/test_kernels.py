@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import level_arrays as la
+from repro.core import workload as wl
 from repro.kernels import ref, ops
 from repro.kernels import hot_gather as hg
 from repro.kernels import splay_search as ssk
@@ -32,6 +33,63 @@ def test_splay_search_sweep(n, levels, nq, qb):
     np.testing.assert_array_equal(np.asarray(f), np.asarray(f0))
     np.testing.assert_array_equal(np.asarray(r), np.asarray(r0))
     np.testing.assert_array_equal(np.asarray(lv), np.asarray(lv0))
+
+
+def _zipf_fixture(width, alpha, nq, seed=0):
+    """Shared splay-shaped Zipf fixture (same builder the benchmark
+    races), plus a sprinkle of absent keys so found=False paths are
+    exercised too."""
+    keys, heights, qs = wl.zipf_level_fixture(width, alpha, nq, seed)
+    rng = np.random.default_rng(seed + 1)
+    qs[:: 17] = rng.integers(0, 20 * width,
+                             len(qs[:: 17])).astype(np.int32)
+    return la.build(keys, heights, min_levels=6), qs
+
+
+@pytest.mark.parametrize("alpha", [0.6, 1.0, 1.4])
+@pytest.mark.parametrize("nq", [512, 333])   # block multiple and not
+def test_splay_search_zipf_wide(alpha, nq):
+    """Acceptance: per-row/windowed kernel identical to kernels/ref.py at
+    width >= 4096 under skewed (Zipf) query batches, including
+    non-block-multiple query counts (internal padding)."""
+    L, qs = _zipf_fixture(4096, alpha, nq, seed=int(alpha * 10) + nq)
+    lvk = jnp.asarray(L.keys)
+    f, r, lv = ops.splay_search(lvk, jnp.asarray(qs),
+                                rank_map=jnp.asarray(L.rank_map),
+                                widths=jnp.asarray(L.widths))
+    f0, r0, lv0 = ref.splay_search_ref(lvk, jnp.asarray(qs))
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(f0))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r0))
+    np.testing.assert_array_equal(np.asarray(lv), np.asarray(lv0))
+
+
+def test_tiered_matches_seed_baseline():
+    """The tiered kernel and the retained seed kernel
+    (splay_search_full) agree bit-for-bit, unpadded query counts
+    included."""
+    L, qs = _zipf_fixture(4096, 1.0, 300, seed=5)
+    lvk = jnp.asarray(L.keys)
+    out_t = ops.splay_search(lvk, jnp.asarray(qs))
+    out_f = ops.splay_search_full(lvk, jnp.asarray(qs))
+    for a, b in zip(out_t, out_f):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_splay_search_unpadded_callers():
+    """Satellite: callers pass arbitrary query counts straight to the
+    kernel wrapper — no pre-padding, outputs sliced to the input length."""
+    rng = np.random.default_rng(3)
+    keys = np.sort(rng.choice(5000, 700, replace=False)).astype(np.int32)
+    heights = rng.integers(0, 3, 700).astype(np.int32)
+    L = la.build(keys, heights, min_levels=3)
+    for nq in (1, 7, 255, 256, 257):
+        qs = rng.choice(keys, nq).astype(np.int32)
+        f, r, lv = ssk.splay_search(jnp.asarray(L.keys), jnp.asarray(qs))
+        assert f.shape == r.shape == lv.shape == (nq,)
+        f0, r0, lv0 = ref.splay_search_ref(jnp.asarray(L.keys),
+                                           jnp.asarray(qs))
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(f0))
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(r0))
 
 
 def test_splay_search_hot_resolves_high():

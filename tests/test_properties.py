@@ -2,8 +2,15 @@
 
 import random
 
-from hypothesis import given, settings, strategies as st
-import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed; invariants are covered "
+           "non-exhaustively by tests/test_level_arrays.py and the "
+           "differential suites")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+import numpy as np  # noqa: E402
 
 from repro.core.ref_py import SplayList
 from repro.core.cbtree import CBTree
