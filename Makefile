@@ -9,7 +9,8 @@ export PYTHONPATH := src:.
 test:
 	$(PY) -m pytest -x -q
 
-# quick perf smoke: kernel race + aggregation; writes BENCH_kernels.json
+# quick perf smoke: kernel race + aggregation + refresh-path race
+# (host vs device_index); writes BENCH_kernels.json
 bench-smoke:
 	$(PY) benchmarks/run.py --only kernels_bench
 

@@ -4,8 +4,12 @@ derived columns carry the structural metrics that transfer to TPU).
 Races the tiered splay-search pipeline (per-row streaming + rank-windowed
 descent, DESIGN.md §5.2) against the retained seed kernel
 (``splay_search_full``: whole level matrix as one resident block,
-full-width compare per level) on Zipf query batches, and measures the
-batched-update aggregation (one weighted fold per unique key).
+full-width compare per level) on Zipf query batches, measures the
+batched-update aggregation (one weighted fold per unique key), and races
+the refresh paths (DESIGN.md §5.3): host ``level_arrays.refresh`` (state
+download + numpy argsort + plane re-upload) vs the device-resident
+``device_index.refresh_device`` (searchsorted merge, zero host bytes) on
+membership-changing and height-only epochs.
 
 Emits the usual CSV lines AND returns a machine-readable payload which
 ``benchmarks/run.py`` writes to ``BENCH_kernels.json`` (op/s, per-level
@@ -22,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
+from repro.core import device_index as dix
 from repro.core import level_arrays as la
 from repro.core import splaylist as sx
 from repro.core import workload as wl
@@ -119,6 +124,131 @@ def _aggregation_case(quick: bool) -> dict:
     }
 
 
+def _synth_state(keys: np.ndarray, rel_h: np.ndarray, capacity: int,
+                 max_level: int = 8) -> sx.SplayState:
+    """SplayState with exactly the fields the refresh paths read (key,
+    top, deleted, zl, n_alloc) populated — the list links/counters are
+    irrelevant to the index plane, so epochs can be synthesized directly
+    at benchmark widths instead of replaying op streams."""
+    st = sx.make(capacity, max_level=max_level)
+    n = len(keys)
+    key = np.full((capacity,), sx.POS_INF_32, np.int32)
+    key[0] = sx.NEG_INF_32
+    key[2:2 + n] = keys
+    top = np.zeros((capacity,), np.int32)
+    top[2:2 + n] = rel_h
+    top[0] = top[1] = max_level
+    return st._replace(
+        key=jnp.asarray(key), top=jnp.asarray(top),
+        zl=jnp.array(0, jnp.int32),
+        n_alloc=jnp.array(n + 2, jnp.int32))
+
+
+def _time_min(fn, reps: int) -> float:
+    """Min-of-reps wall clock (the refresh race runs at millisecond
+    scale where scheduler noise dominates a mean)."""
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _refresh_case(width: int, churn: int, epochs: int, reps: int,
+                  seed: int = 2) -> dict:
+    """Race the refresh paths over a stream of rebalance epochs.
+
+    ``churn`` keys are deleted and ``churn`` inserted per epoch (the
+    membership-changing case: host pays ``to_numpy`` + argsort + a full
+    rectangle re-upload; the device path folds the change with a
+    top_k/searchsorted merge).  ``churn=0`` is the height-only epoch
+    (host has its permuted fast path — the device path's merge
+    degenerates to the identity).  Epochs evolve ONE state the way the
+    engine does — mark-delete in place, bump-allocate inserts — so the
+    plane's slot map stays live-valid across epochs, as in serving
+    (only ``rebuild`` compacts slots).  Both paths are asserted
+    bit-identical on the final plane."""
+    rng = np.random.default_rng(seed)
+    n_levels, hmax = 6, 5
+    n0 = int(width * 0.9)
+    capacity = n0 + epochs * churn + 16
+    space = rng.permutation(20 * width).astype(np.int32)
+    slot_keys = space[:n0].copy()          # key of slot 2 + i (bump order)
+    deleted = np.zeros(n0, bool)
+    states = []
+    for _ in range(epochs + 1):
+        if states and churn:               # epoch 0 is the base state
+            live = np.nonzero(~deleted)[0]
+            deleted[rng.choice(live, churn, replace=False)] = True
+            fresh = space[len(slot_keys):len(slot_keys) + churn]
+            slot_keys = np.concatenate([slot_keys, fresh])
+            deleted = np.concatenate([deleted, np.zeros(churn, bool)])
+        h = rng.integers(0, hmax + 1, len(slot_keys)).astype(np.int32)
+        st = _synth_state(slot_keys, h, capacity)
+        st = st._replace(deleted=jnp.asarray(
+            np.concatenate([np.zeros(2, bool), deleted,
+                            np.zeros(capacity - 2 - len(deleted), bool)])))
+        states.append(st)
+
+    prev_h0 = la.from_state(states[0], min_levels=n_levels, width=width)
+    prev_d0 = dix.from_state_device(states[0], n_levels=n_levels,
+                                    width=width)
+    max_new = max(2 * churn, 64)
+
+    def host_fold():
+        prev = prev_h0
+        up = None
+        for st in states[1:]:
+            prev = la.refresh(st, prev)
+            # the serving loop consumes the plane on device: include the
+            # re-upload the host path forces every epoch
+            up = tuple(jnp.asarray(x) for x in
+                       (prev.keys, prev.widths, prev.heights,
+                        prev.rank_map))
+        up[0].block_until_ready()
+        return up
+
+    def dev_fold():
+        p = prev_d0
+        for st in states[1:]:
+            p = dix.refresh_device(st, p, max_new=max_new)
+        p.keys.block_until_ready()
+        return p
+
+    t_host = _time_min(host_fold, reps) / epochs
+    t_dev = _time_min(dev_fold, reps) / epochs
+
+    # correctness: final planes bit-identical (device vs host vs scratch)
+    final_h = host_fold()
+    final_d = dev_fold()
+    ref = la.from_state(states[-1], min_levels=n_levels, width=width)
+    assert (np.asarray(final_d.keys) == ref.keys).all()
+    assert (np.asarray(final_d.rank_map) == ref.rank_map).all()
+    assert (np.asarray(final_h[0]) == np.asarray(final_d.keys)).all()
+
+    itemsize = 4
+    C, L1 = states[0].key.shape[0], states[0].max_level + 1
+    state_download = (2 * L1 * C + 5 * C) * itemsize   # to_numpy: all fields
+    plane_upload = (2 * n_levels * width + width + n_levels) * itemsize
+    mode = "membership" if churn else "height_only"
+    emit(f"refresh_{mode}_w{width}", t_dev * 1e6,
+         f"host_us={t_host * 1e6:.1f};speedup={t_host / t_dev:.2f};"
+         f"churn={churn}")
+    return {
+        "mode": mode, "width": width, "n_levels": n_levels,
+        "churn_per_epoch": int(churn), "epochs": epochs,
+        "epochs_per_sec_host": 1.0 / t_host,
+        "epochs_per_sec_device": 1.0 / t_dev,
+        "us_per_epoch_host": t_host * 1e6,
+        "us_per_epoch_device": t_dev * 1e6,
+        "speedup_device_over_host": t_host / t_dev,
+        "host_bytes_moved_per_epoch": state_download + plane_upload,
+        "device_bytes_moved_per_epoch": 0,
+    }
+
+
 def run(quick: bool = False) -> dict:
     width = 4096 if quick else 8192
     nq = 1024 if quick else 4096
@@ -163,6 +293,21 @@ def run(quick: bool = False) -> dict:
         })
     payload["bytes_model"] = _bytes_model(L, qb, nq)
     payload["aggregation"] = _aggregation_case(quick)
+    # refresh-path race (DESIGN.md §5.3): membership-changing epochs are
+    # the acceptance case (device merge vs host argsort + round-trip);
+    # height-only epochs race the two fast paths.  Always measured at
+    # width 4096 (the acceptance point); full mode adds the wide pair.
+    r_epochs = 4 if quick else 8
+    r_reps = 6 if quick else 8
+    payload["refresh_path"] = [
+        _refresh_case(4096, churn=64, epochs=r_epochs, reps=r_reps),
+        _refresh_case(4096, churn=0, epochs=r_epochs, reps=r_reps),
+    ]
+    if not quick:
+        payload["refresh_path"] += [
+            _refresh_case(width, churn=64, epochs=r_epochs, reps=r_reps),
+            _refresh_case(width, churn=0, epochs=r_epochs, reps=r_reps),
+        ]
 
     # hot_gather: bytes-touched model (hot hits avoid HBM entirely); the
     # hot set comes from observed counts, as the splay heights do

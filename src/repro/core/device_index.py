@@ -1,0 +1,322 @@
+"""Device-resident splay index plane (DESIGN.md §5.3).
+
+The level-array rectangle (``core/level_arrays.py``) started life as a
+host-side export: every rebalance epoch round-tripped the ``SplayState``
+through ``to_numpy``, paid a host argsort on membership change, and
+re-uploaded the whole ``[L, W]`` matrix — exactly the
+adaptivity-vs-throughput tension the splay-list exists to resolve.  This
+module keeps the same layout but makes it live where it is consumed:
+
+  * :class:`DeviceLevelArrays` — the rectangle as jnp arrays (a pytree;
+    passes straight through jit/scan and into the Pallas search
+    wrappers), plus a ``slots`` companion mapping bottom-row keys to
+    their state slots so epoch refreshes are pure gathers;
+  * :func:`build_device` / :func:`from_state_device` — jitted full
+    construction (device co-sort + the same mask/prefix-sum pass as
+    ``level_arrays._assemble``);
+  * :func:`refresh_device` — jitted incremental rebuild: alive
+    keys/heights are read from the state *on device*, inserted keys are
+    merged into the previous sorted bottom row by ``top_k`` +
+    ``searchsorted`` rank arithmetic (deletions are masked out by
+    absence), and the prefix-sum re-layering reruns — no
+    full-membership sort, no host transfer, no shape change.
+
+Scatter- and sort-free by construction (the hot path): XLA lowers
+gathers, cumsums and ``top_k`` to tight vectorized loops on every
+backend, while generic scatters and multi-operand sorts degrade to
+element-wise code on CPU and are serialization points on TPU.  The one
+data-dependent reorder left — sorting the epoch's newly inserted keys
+among themselves — is a bounded ``top_k`` (``max_new``, the epoch batch
+size), not an O(n log n) pass over the key set.
+
+Shape-stability contract: a plane's ``(n_levels, width)`` is fixed at
+creation and every ``refresh_device`` preserves it, so jit caches
+survive epochs (transient empties included).  ``n_levels`` must bound
+the maximum relative height (``state.max_level`` always does; smaller
+bounds are fine when the workload's heights are known to be capped) and
+``width`` must bound the alive-key count (``capacity - 2`` always
+does).  Within those bounds the output is bit-identical to the host
+``level_arrays.build`` on the same state — asserted differentially in
+``tests/test_device_index.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import splaylist as sx
+
+# one canonical sentinel: the splay-list's +INF key is also the level
+# arrays' pad value (the host oracle's level_arrays.PAD_KEY equals it)
+PAD_KEY = sx.POS_INF_32
+
+
+class DeviceLevelArrays(NamedTuple):
+    """The TPU-native splay layout, device-resident (same fields and
+    semantics as ``level_arrays.LevelArrays`` plus the slot map)."""
+    keys: jax.Array        # int32 [L, W], +INF padded, sorted, nested
+    widths: jax.Array      # int32 [L], live entries per row
+    heights: jax.Array     # int32 [W], splay height of bottom-row keys
+    rank_map: jax.Array    # int32 [L, W], index of keys[r, j] in row r+1
+    slots: jax.Array       # int32 [W], state slot of bottom-row key j
+    #                        (-1 when unknown: refresh falls back to the
+    #                        scatter path for the epoch and re-derives it)
+
+    @property
+    def n_levels(self) -> int:
+        return self.keys.shape[0]
+
+    @property
+    def width(self) -> int:
+        return self.keys.shape[1]
+
+
+def _compact_take(cs: jax.Array, width: int) -> jax.Array:
+    """Inverse of a 0/1 prefix sum: take[j] = index of the j-th marked
+    element (cs is the inclusive cumsum of the mark vector).  The gather
+    formulation of stream compaction — no scatter."""
+    col = jnp.arange(width, dtype=jnp.int32)
+    return jnp.minimum(jnp.searchsorted(cs, col + 1).astype(jnp.int32),
+                       width - 1)
+
+
+def _assemble_device(keys_sorted: jax.Array, rel_h: jax.Array,
+                     slots: jax.Array, n_levels: int) -> DeviceLevelArrays:
+    """The mask/prefix-sum construction of ``level_arrays._assemble`` on
+    device: ``keys_sorted`` [W] holds the live keys sorted ascending in a
+    prefix, PAD_KEY after; ``rel_h``/``slots`` [W] are aligned (pad lanes
+    ignored).  Row compaction is gather-only: the in-row position is the
+    prefix count (as on host), and the member picked for output lane
+    (r, j) is the inverse of that prefix sum — one vmapped searchsorted
+    instead of an [L, W] scatter."""
+    width = keys_sorted.shape[0]
+    alive = keys_sorted != PAD_KEY
+    h = jnp.where(alive, rel_h, -1)
+
+    row_min_h = (n_levels - 1 - jnp.arange(n_levels, dtype=jnp.int32))
+    mask = h[None, :] >= row_min_h[:, None]                # [L, W]
+    cs = jnp.cumsum(mask, axis=1, dtype=jnp.int32)         # [L, W]
+    widths = cs[:, width - 1]
+
+    col = jnp.arange(width, dtype=jnp.int32)
+    take = jax.vmap(functools.partial(_compact_take, width=width))(cs)
+    live = col[None, :] < widths[:, None]
+    rows = jnp.where(live, jnp.take(keys_sorted, take), PAD_KEY)
+
+    # rank map: the key at (r, j) sits in row r+1 at that row's prefix
+    # count minus one (nested rows); pad entries close the descent
+    # window at the next row's live width; bottom row is the identity.
+    cs_next = jnp.concatenate(
+        [cs[1:], jnp.ones((1, width), jnp.int32)], axis=0)
+    rank_live = jnp.take_along_axis(cs_next, take, axis=1) - 1
+    pad_default = jnp.concatenate(
+        [widths[1:], jnp.zeros((1,), jnp.int32)])
+    rank_map = jnp.where(live, rank_live, pad_default[:, None])
+    rank_map = rank_map.at[n_levels - 1].set(col)
+
+    heights = jnp.where(alive, rel_h, 0).astype(jnp.int32)
+    return DeviceLevelArrays(keys=rows, widths=widths, heights=heights,
+                             rank_map=rank_map, slots=slots)
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels",))
+def build_device(keys: jax.Array, rel_h: jax.Array,
+                 n_levels: int) -> DeviceLevelArrays:
+    """Full on-device build from bare (keys, heights): ``keys`` [W]
+    int32 with PAD_KEY in dead lanes, ``rel_h`` [W] aligned.  One stable
+    device co-sort (live keys are < PAD_KEY so they land in a sorted
+    prefix), then the shared prefix-sum pass.  The slot map is unknown
+    (-1): fine for kernel fixtures; planes that will be *refreshed*
+    against a state should come from :func:`from_state_device`, which
+    fills it (a -1 slot map just makes the first refresh take the
+    scatter fallback and re-derive it)."""
+    keys = keys.astype(jnp.int32)
+    h = jnp.where(keys != PAD_KEY, rel_h.astype(jnp.int32), 0)
+    ks, hs = jax.lax.sort((keys, h), num_keys=1)
+    slots = jnp.full((keys.shape[0],), -1, jnp.int32)
+    return _assemble_device(ks, hs, slots, n_levels)
+
+
+def _alive_slots(st: sx.SplayState) -> Tuple[jax.Array, jax.Array]:
+    """Alive (keys, relative heights) in slot order, [capacity]-shaped —
+    the device analogue of ``level_arrays._extract`` (no ``to_numpy``).
+    Dead lanes hold PAD_KEY / 0."""
+    idx = jnp.arange(st.capacity)
+    alive = ((idx >= 2) & (idx < st.n_alloc) & (~st.deleted)
+             & (st.key < sx.POS_INF_32))
+    keys = jnp.where(alive, st.key, PAD_KEY).astype(jnp.int32)
+    rel_h = jnp.where(alive, st.top - st.zl, 0).astype(jnp.int32)
+    return keys, rel_h
+
+
+@functools.partial(jax.jit, static_argnames=("n_levels", "width"))
+def from_state_device(st: sx.SplayState, n_levels: int,
+                      width: int) -> DeviceLevelArrays:
+    """Build a fresh plane from a splay-list state, fully on device.
+    ``width`` must bound the alive-key count (``capacity - 2`` always
+    does); ``n_levels`` must bound relative heights (``max_level``
+    always does)."""
+    keys, rel_h = _alive_slots(st)
+    slot_ids = jnp.arange(st.capacity, dtype=jnp.int32)
+    ks, hs, sl = jax.lax.sort((keys, rel_h, slot_ids), num_keys=1)
+    if st.capacity < width:                # small states pad out
+        pad = width - st.capacity
+        ks = jnp.pad(ks, (0, pad), constant_values=PAD_KEY)
+        hs = jnp.pad(hs, (0, pad))
+        sl = jnp.pad(sl, (0, pad), constant_values=-1)
+    return _assemble_device(ks[:width], hs[:width], sl[:width], n_levels)
+
+
+def _merge_rows(bottom, surv, old_h, slots_eff, ns, new_h, new_slots,
+                n_new, width, kk):
+    """Two-way merge of the surviving previous bottom row with the
+    sorted inserted keys, gather-only: compact the survivors (inverse
+    prefix sum), place each survivor at (survivors before it) + (new
+    keys below it), and read the merged row back through one
+    searchsorted over those positions."""
+    col = jnp.arange(width, dtype=jnp.int32)
+    surv_i = surv.astype(jnp.int32)
+    cs_s = jnp.cumsum(surv_i)
+    n_old = cs_s[width - 1]
+    take_a = _compact_take(cs_s, width)
+    a_k = jnp.where(col < n_old, jnp.take(bottom, take_a), PAD_KEY)
+    a_h = jnp.take(old_h, take_a)
+    a_s = jnp.take(slots_eff, take_a)
+
+    # merged position of survivor i; strictly increasing (pad lanes
+    # continue past the live prefix), so it is searchsorted-invertible
+    pos_a = (jnp.arange(width, dtype=jnp.int32)
+             + jnp.searchsorted(ns, a_k).astype(jnp.int32))
+    a_of = jnp.searchsorted(pos_a, col).astype(jnp.int32)
+    a_ofc = jnp.minimum(a_of, width - 1)
+    from_a = jnp.take(pos_a, a_ofc) == col
+    b_of = jnp.minimum(col - jnp.minimum(a_of, col), kk - 1)
+
+    n_tot = n_old + n_new
+    merged_k = jnp.where(
+        col < n_tot,
+        jnp.where(from_a, jnp.take(a_k, a_ofc), jnp.take(ns, b_of)),
+        PAD_KEY)
+    merged_h = jnp.where(from_a, jnp.take(a_h, a_ofc),
+                         jnp.take(new_h, b_of))
+    merged_s = jnp.where(from_a, jnp.take(a_s, a_ofc),
+                         jnp.take(new_slots, b_of))
+    return merged_k, merged_h, merged_s
+
+
+@functools.partial(jax.jit, static_argnames=("max_new",))
+def refresh_device(st: sx.SplayState, prev: DeviceLevelArrays,
+                   max_new: int = 1024) -> DeviceLevelArrays:
+    """Incremental on-device rebuild after a rebalance epoch.
+
+    Membership changes are folded without re-sorting the key set (the
+    batch-merge formulation of concurrent rebuilds, arXiv 2309.09359):
+
+      1. every alive slot is classified old/new by one ``searchsorted``
+         against the previous sorted bottom row;
+      2. surviving old keys keep their relative order — their heights
+         come back through the plane's slot map (pure gathers); deleted
+         keys are masked out by absence;
+      3. the newly inserted keys are extracted *sorted* by one bounded
+         ``top_k`` (``max_new`` — size it by the epoch batch; inserts
+         beyond it are dropped until the next full build), then placed
+         by mirrored rank arithmetic;
+      4. the prefix-sum re-layering reruns on the merged row.
+
+    The slot map is validated against the state (``rebuild`` compacts
+    slots); a stale or absent map routes that epoch through a scatter
+    fallback which also re-derives it, so correctness never depends on
+    the map.  Output shape equals ``prev``'s — stable across epochs,
+    transient empties included — so jitted consumers never recompile.
+    Keys whose relative height exceeds ``n_levels - 1`` saturate into
+    row 0 (pick ``n_levels = state.max_level`` to rule this out); alive
+    counts beyond ``width`` cannot be represented — size the plane by
+    ``capacity - 2`` to rule that out too.
+    """
+    n_levels, width = prev.keys.shape
+    cap = st.capacity
+    k_slot, h_slot = _alive_slots(st)
+    alive = k_slot != PAD_KEY
+
+    bottom = prev.keys[n_levels - 1]                       # [W] sorted
+    w_bot = prev.widths[n_levels - 1]
+    col = jnp.arange(width, dtype=jnp.int32)
+    lane = col < w_bot
+
+    # ---- old keys: gather through the slot map ---------------------------
+    sc = jnp.clip(prev.slots, 0, cap - 1)
+    match = lane & (jnp.take(st.key, sc).astype(jnp.int32) == bottom)
+    stale = jnp.any(lane & ~match)
+
+    # state-side classification: which alive slots are inserts
+    p = jnp.searchsorted(bottom, k_slot).astype(jnp.int32)
+    pc = jnp.clip(p, 0, width - 1)
+    is_new = alive & (jnp.take(bottom, pc) != k_slot)
+
+    def via_map(_):
+        surv = match & ~jnp.take(st.deleted, sc)
+        return surv, sc
+
+    def via_scatter(_):
+        # stale/absent slot map (a rebuild compacted the state, or the
+        # plane came from build_device): re-derive it for this epoch
+        is_old = alive & ~is_new
+        dst = jnp.where(is_old, pc, width)
+        surv = jnp.zeros((width,), bool).at[dst].set(True, mode="drop")
+        slots = jnp.full((width,), -1, jnp.int32).at[dst].set(
+            jnp.arange(cap, dtype=jnp.int32), mode="drop")
+        return surv, slots
+
+    surv, slots_eff = jax.lax.cond(stale, via_scatter, via_map,
+                                   operand=None)
+    old_h = (jnp.take(st.top, jnp.clip(slots_eff, 0, cap - 1))
+             - st.zl).astype(jnp.int32)
+
+    # ---- new keys: bounded top_k extracts them already sorted ------------
+    kk = min(max_new, cap)
+    n_new = jnp.minimum(jnp.sum(is_new.astype(jnp.int32)), kk)
+
+    def extract_new(_):
+        neg = jnp.where(is_new, -k_slot, -jnp.int32(PAD_KEY))
+        vals, new_slots = jax.lax.top_k(neg, kk)
+        ns = jnp.where(jnp.arange(kk) < n_new, -vals, PAD_KEY)
+        new_h = (jnp.take(st.top, new_slots) - st.zl).astype(jnp.int32)
+        return ns, new_h, new_slots.astype(jnp.int32)
+
+    def no_new(_):
+        z = jnp.zeros((kk,), jnp.int32)
+        return jnp.full((kk,), PAD_KEY, jnp.int32), z, z
+
+    ns, new_h, new_slots = jax.lax.cond(n_new > 0, extract_new, no_new,
+                                        operand=None)
+
+    # height-only epoch (the common serving case): the merge is the
+    # identity over the previous bottom row — skip the rank arithmetic
+    n_old = jnp.sum(surv.astype(jnp.int32))
+
+    def identity_merge(_):
+        return bottom, old_h, slots_eff
+
+    def merge(_):
+        return _merge_rows(bottom, surv, old_h, slots_eff, ns, new_h,
+                           new_slots, n_new, width, kk)
+
+    merged_k, merged_h, merged_s = jax.lax.cond(
+        (n_new == 0) & (n_old == w_bot), identity_merge, merge,
+        operand=None)
+    return _assemble_device(merged_k, merged_h, merged_s, n_levels)
+
+
+def to_host(plane: DeviceLevelArrays):
+    """Materialize as a host ``LevelArrays`` (tests / debugging only —
+    the serving path never calls this)."""
+    import numpy as np
+    from repro.core import level_arrays as la
+    return la.LevelArrays(
+        keys=np.asarray(plane.keys), widths=np.asarray(plane.widths),
+        heights=np.asarray(plane.heights),
+        rank_map=np.asarray(plane.rank_map))

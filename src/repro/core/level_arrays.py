@@ -27,6 +27,13 @@ The construction itself is a vectorized mask/prefix-sum pass (no Python
 loop over levels): position of key i in row r is the prefix count of
 keys j <= i with height >= h_r, which also *is* the rank map once read
 off one row down.
+
+This module is the HOST oracle: serving loops use the device-resident
+mirror (``core/device_index.py``, DESIGN.md §5.3), which runs the same
+construction as jitted jnp — including an incremental ``refresh_device``
+that merges membership changes into the previous sorted bottom row with
+no argsort and no host transfer.  The two are asserted bit-identical in
+``tests/test_device_index.py``; numpy stays the readable ground truth.
 """
 
 from __future__ import annotations
@@ -132,7 +139,10 @@ def refresh(st: sx.SplayState, prev: LevelArrays,
     so downstream jitted kernels see stable shapes and never recompile.
 
     Falls back to a full :func:`build` when keys were inserted/deleted
-    or the new heights outgrow the previous level count.
+    or the new heights outgrow the previous level count.  A transient
+    empty preserves the previous shape exactly.  Device serving loops
+    use ``device_index.refresh_device`` instead, which additionally
+    folds membership changes without the argsort.
     """
     keys, rel_h = _extract(st)
     width = prev.keys.shape[1]
@@ -149,7 +159,10 @@ def refresh(st: sx.SplayState, prev: LevelArrays,
             if (int(rel_sorted.max()) + 1) <= lv:
                 return _assemble(bottom, rel_sorted, lv, width)
     if len(keys) <= width:
-        # keep shapes stable across epochs when capacity allows
+        # keep shapes stable across epochs when capacity allows —
+        # including the transient-empty epoch (len(keys) == 0), which
+        # must preserve (n_levels, width) exactly so jitted consumers
+        # keep their caches (regression-tested in test_level_arrays)
         lv, width_keep = prev_levels, width
         if len(keys) and int(rel_h.max()) + 1 > lv:
             lv = int(rel_h.max()) + 1

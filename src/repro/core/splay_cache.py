@@ -1,5 +1,5 @@
 """Splay-tiered adaptive embedding cache — the framework integration of
-the paper's technique (DESIGN.md §3).
+the paper's technique (DESIGN.md §3, §5.3).
 
 Token frequencies are Zipf-distributed; the splay-list run over the token
 stream assigns each id a height calibrated to its frequency
@@ -15,11 +15,20 @@ runs on a Bernoulli(1/c) subsample of batches, and the hot set is
 recomputed every `refresh_every` steps with hysteresis (a resident id is
 evicted only when it falls two levels below the admission height),
 mirroring ascent/descent thresholds' factor-2 separation.
+
+The heights→hot-set→gather-buffer pipeline runs as ONE jitted device
+pass (``_hot_select``): exact integer heights (count-leading-zeros, the
+same `m >> e` arithmetic the splay-list uses), a stable top-k for the
+admission set, hysteresis via masks + prefix sums, and a static-shape
+hot-id table so the buffer gather never recompiles.  The numpy path
+(``device=False``) is retained as the differential oracle; both call the
+single :meth:`heights` calibration so the formulas cannot drift.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -29,6 +38,64 @@ import numpy as np
 from repro.kernels import ops as kops
 
 
+def _int_log2_floor(q: np.ndarray) -> np.ndarray:
+    """Exact floor(log2(q)) for integer q >= 1: frexp exponent, with an
+    integer-shift correction for q >= 2^53 where float64 can round q up
+    to the next power of two (e.g. 2^60 - 1)."""
+    lg = np.frexp(q.astype(np.float64))[1].astype(np.int64) - 1
+    return np.where(q >> lg == 0, lg - 1, lg)
+
+
+@functools.partial(jax.jit, static_argnames=("hot_size",))
+def _hot_select(h: jax.Array, prev_in_hot: jax.Array, hot_size: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """One device pass from heights to the hot set (DESIGN.md §3).
+
+    Mirrors the numpy pipeline bit-for-bit: admission set = the
+    ``hot_size`` tallest ids (stable order — height desc, id asc),
+    hysteresis keeps residents within 2 levels of the admission height
+    (kept ids stay in ascending order, as ``np.intersect1d`` yields),
+    and the remainder is filled from the admission set in rank order.
+    Returns (hot_ids [hot_size] int32, -1 padded; hot_rank [vocab])."""
+    v = h.shape[0]
+    n_adm = min(hot_size, v)        # admission set (vocab may be tiny)
+    ids = jnp.arange(v, dtype=jnp.int32)
+    # stable "argsort(-h)": height desc, id asc among ties
+    score = h.astype(jnp.int32) * v + (v - 1 - ids)
+    _, cand = jax.lax.top_k(score, n_adm)
+    cand = cand.astype(jnp.int32)
+    h_star = jnp.maximum(h[cand[n_adm - 1]] - 2, 0)
+
+    keep_mask = prev_in_hot & (h >= h_star)                 # [V]
+    n_keep = jnp.sum(keep_mask.astype(jnp.int32))           # <= hot_size
+    kp = jnp.cumsum(keep_mask.astype(jnp.int32)) - 1
+    hot_ids = jnp.full((hot_size,), -1, jnp.int32)
+    hot_ids = hot_ids.at[jnp.where(keep_mask, kp, hot_size)].set(
+        ids, mode="drop")
+
+    sel = ~keep_mask[cand]                                  # not already kept
+    sp = jnp.cumsum(sel.astype(jnp.int32)) - 1
+    take = sel & (sp < hot_size - n_keep)
+    hot_ids = hot_ids.at[jnp.where(take, n_keep + sp, hot_size)].set(
+        cand, mode="drop")
+
+    valid = hot_ids >= 0
+    hot_rank = jnp.full((v,), -1, jnp.int32)
+    hot_rank = hot_rank.at[jnp.where(valid, hot_ids, v)].set(
+        jnp.arange(hot_size, dtype=jnp.int32), mode="drop")
+    return hot_ids, hot_rank
+
+
+@jax.jit
+def _heights_device(counts: jax.Array, m: jax.Array) -> jax.Array:
+    """Device mirror of :meth:`SplayVocabCache.heights` — exact integer
+    form via count-leading-zeros (asserted equal in tests)."""
+    k = jnp.maximum(31 - jax.lax.clz(jnp.maximum(m, 1)), 0)
+    q = jnp.maximum(m // jnp.maximum(counts, 1), 1)
+    lg = 31 - jax.lax.clz(q)
+    return jnp.maximum(k - lg, 0).astype(jnp.int32)
+
+
 @dataclasses.dataclass
 class SplayVocabCache:
     vocab: int
@@ -36,12 +103,14 @@ class SplayVocabCache:
     update_prob: float = 0.01       # the paper's p = 1/c
     refresh_every: int = 64
     seed: int = 0
+    device: bool = True             # jitted refresh (False: numpy oracle)
 
     def __post_init__(self):
         self.counts = np.zeros(self.vocab, np.int64)
         self.m = 0
         self.hot_ids = np.zeros((0,), np.int32)
         self.hot_rank = np.full(self.vocab, -1, np.int32)
+        self._hot_ids_dev = None    # [hot_size] int32, -1 padded (device)
         self.steps = 0
         self.rng = np.random.default_rng(self.seed)
         self._hot_buf = None
@@ -60,41 +129,63 @@ class SplayVocabCache:
             self.refresh()
 
     def heights(self) -> np.ndarray:
-        """Splay heights from counts: h(x) = max(0, k - ceil(log2(m/f)))."""
+        """Splay heights from counts: h(x) = max(0, k - floor(log2(m/f)))
+        — the Lemma-2 calibration, in exact integer arithmetic (the
+        single source of the formula; the refresh paths call this or its
+        jitted mirror ``_heights_device``)."""
         k = max(int(self.m).bit_length() - 1, 0)
-        f = np.maximum(self.counts, 1)
-        lg = np.log2(np.maximum(self.m / f, 1.0)).astype(np.int64)
-        return np.maximum(k - lg, 0)
+        q = np.maximum(int(self.m) // np.maximum(self.counts, 1), 1)
+        return np.maximum(k - _int_log2_floor(q), 0)
 
     def refresh(self, table: Optional[jax.Array] = None) -> None:
-        """Recompute the hot set with hysteresis."""
+        """Recompute the hot set with hysteresis.  Default path is one
+        jitted device pass; ``device=False`` runs the retained numpy
+        pipeline (the differential oracle for tests)."""
         if self.m == 0:
             return
-        k = max(int(self.m).bit_length() - 1, 0)
-        h = np.maximum(
-            k - np.log2(np.maximum(self.m / np.maximum(self.counts, 1),
-                                   1.0)).astype(np.int64), 0)
-        # admission height: smallest h* admitting <= hot_size ids
-        order = np.argsort(-h, kind="stable")
-        cand = order[:self.hot_size]
-        h_star = h[cand[-1]] if len(cand) else 0
-        keep = np.intersect1d(self.hot_ids,
-                              np.nonzero(h >= max(h_star - 2, 0))[0])
-        new = cand[~np.isin(cand, keep)][:self.hot_size - len(keep)]
-        self.hot_ids = np.concatenate([keep, new]).astype(np.int32)
-        self.hot_rank = np.full(self.vocab, -1, np.int32)
-        self.hot_rank[self.hot_ids] = np.arange(len(self.hot_ids),
-                                                dtype=np.int32)
+        # the jitted path works in int32 (x64 stays off); past that range
+        # the exact int64 numpy pipeline takes over rather than silently
+        # saturating k / collapsing large counts into ties
+        if self.device and self.m < 2 ** 31 and \
+                int(self.counts.max(initial=0)) < 2 ** 31:
+            h = _heights_device(
+                jnp.asarray(self.counts.astype(np.int32)),
+                np.int32(self.m))
+            prev = jnp.asarray(self.hot_rank) >= 0
+            ids_dev, rank_dev = _hot_select(h, prev, self.hot_size)
+            self._hot_ids_dev = ids_dev
+            self.hot_rank = rank_dev
+            ids = np.asarray(ids_dev)          # small host mirror (stats)
+            self.hot_ids = ids[ids >= 0].astype(np.int32)
+        else:
+            h = self.heights()
+            order = np.argsort(-h, kind="stable")
+            cand = order[:self.hot_size]
+            h_star = h[cand[-1]] if len(cand) else 0
+            keep = np.intersect1d(
+                self.hot_ids, np.nonzero(h >= max(h_star - 2, 0))[0])
+            new = cand[~np.isin(cand, keep)][:self.hot_size - len(keep)]
+            self.hot_ids = np.concatenate([keep, new]).astype(np.int32)
+            self.hot_rank = np.full(self.vocab, -1, np.int32)
+            self.hot_rank[self.hot_ids] = np.arange(
+                len(self.hot_ids), dtype=np.int32)
+            self._hot_ids_dev = None
         self._hot_buf = None        # invalidate
 
     # -- device side ---------------------------------------------------------
 
     def hot_buffer(self, table: jax.Array) -> jax.Array:
-        if self._hot_buf is None or self._hot_buf.shape[0] != len(
-                self.hot_ids):
-            self._hot_buf = (table[jnp.asarray(self.hot_ids)]
-                             if len(self.hot_ids) else
-                             jnp.zeros((1, table.shape[1]), table.dtype))
+        """Gathered hot rows.  On the device path the buffer has a
+        static [hot_size, d] shape (pad rows point at row 0 and are
+        never addressed — hot_rank is -1 for absent ids), so the gather
+        and its consumers never recompile as the hot set drifts."""
+        if self._hot_buf is None:
+            if self._hot_ids_dev is not None:
+                self._hot_buf = table[jnp.maximum(self._hot_ids_dev, 0)]
+            elif len(self.hot_ids):
+                self._hot_buf = table[jnp.asarray(self.hot_ids)]
+            else:
+                self._hot_buf = jnp.zeros((1, table.shape[1]), table.dtype)
         return self._hot_buf
 
     def lookup(self, table: jax.Array, ids: jax.Array) -> jax.Array:
@@ -110,4 +201,5 @@ class SplayVocabCache:
     def hit_rate(self, ids: np.ndarray) -> float:
         if len(self.hot_ids) == 0:
             return 0.0
-        return float(np.mean(self.hot_rank[np.asarray(ids).ravel()] >= 0))
+        rank = np.asarray(self.hot_rank)
+        return float(np.mean(rank[np.asarray(ids).ravel()] >= 0))

@@ -664,6 +664,54 @@ def run_contains_batch(st: SplayState, keys, upd_mask,
 
 
 # ---------------------------------------------------------------------------
+# serving epochs: op batch + device index-plane refresh, all under jit
+# (DESIGN.md §5.3)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("aggregate",))
+def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
+              aggregate: bool = False):
+    """One serving epoch entirely on device: apply a batch of operations
+    (contains/insert/delete via :func:`run_ops`; ``aggregate=True`` runs
+    the flat-combined contains fold of :func:`run_contains_batch`
+    instead, ignoring ``kinds``), then incrementally refresh the
+    device-resident index plane (``device_index.refresh_device``).  The
+    level arrays never leave the accelerator — no ``to_numpy``, no host
+    argsort, stable shapes across epochs.  Returns
+    ``(state, plane, results[B], path_len[B])``."""
+    from repro.core import device_index as dix
+    if aggregate:
+        st, res, plen = run_contains_batch(st, keys, upd_mask,
+                                           aggregate=True)
+    else:
+        st, res, plen = run_ops(st, kinds, keys, upd_mask)
+    # an epoch cannot insert more keys than it has ops: bound the
+    # refresh's new-key extraction by the batch size
+    plane = dix.refresh_device(st, plane, max_new=keys.shape[0])
+    return st, plane, res, plen
+
+
+@functools.partial(jax.jit, static_argnames=("aggregate",))
+def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
+                aggregate: bool = False):
+    """The jitted epoch *loop*: scan :func:`run_epoch` over ``[E, B]``
+    op batches, threading (state, plane) through the carry — E epochs of
+    search + update + index refresh with zero host round-trips of
+    index-plane data.  Returns ``(state, plane, results[E, B],
+    path_len[E, B])``."""
+    def step(carry, ep):
+        s, pl = carry
+        kd, ks, up = ep
+        s, pl, res, plen = run_epoch(s, pl, kd, ks, up,
+                                     aggregate=aggregate)
+        return (s, pl), (res, plen)
+
+    (st, plane), (res, plen) = jax.lax.scan(
+        step, (st, plane), (kinds, keys, upd_mask))
+    return st, plane, res, plen
+
+
+# ---------------------------------------------------------------------------
 # host-side introspection (tests / stats)
 # ---------------------------------------------------------------------------
 

@@ -20,8 +20,9 @@ def splay_search(level_keys, queries, query_block: int = 256,
                  rank_map=None, widths=None):
     """Batched level-array search (see kernels/splay_search.py).  Queries
     of any length (the kernel wrapper pads to the block multiple and
-    slices back).  Pass a ``LevelArrays``' rank_map/widths to skip the
-    on-the-fly window derivation."""
+    slices back).  ``level_keys`` may be a bare [L, W] matrix or an index
+    plane struct (``DeviceLevelArrays``/``LevelArrays``) — the struct's
+    precomputed rank_map/widths skip the on-the-fly window derivation."""
     return ssk.splay_search(
         level_keys, queries, query_block=query_block,
         interpret=not on_tpu(), rank_map=rank_map, widths=widths)

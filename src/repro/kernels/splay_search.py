@@ -28,7 +28,12 @@ cold-row *compute*, never their residency.  ``benchmarks/kernels_bench``
 races the two and emits the bytes-touched model.
 
 Both wrappers pad the query batch to the block multiple internally and
-slice the outputs back — callers never pre-pad.
+slice the outputs back — callers never pre-pad.  They also accept an
+index plane struct (``core.device_index.DeviceLevelArrays`` or the host
+``core.level_arrays.LevelArrays``) in place of the bare key matrix, in
+which case the precomputed rank map and row widths ride along and the
+``rank_windows`` jnp fallback below is the shared derivation path for
+bare-matrix callers only.
 """
 
 from __future__ import annotations
@@ -140,11 +145,20 @@ def _kernel_tiered(fetch_ref, widths_ref, q_ref, row_ref, rm_ref,
 def splay_search(level_keys, queries, query_block: int =
                  DEFAULT_QUERY_BLOCK, interpret: bool = True,
                  rank_map=None, widths=None):
-    """Tiered batched search.  level_keys int32 [n_levels, width] (sorted
-    rows, +INF padded, nested); queries int32 [q] (any length — padded to
-    the block multiple internally).  rank_map/widths: precomputed
-    ``LevelArrays`` companions (derived on the fly when omitted).
+    """Tiered batched search.  level_keys: int32 [n_levels, width]
+    (sorted rows, +INF padded, nested) — or an index plane struct
+    (``DeviceLevelArrays``/``LevelArrays``), whose rank_map/widths are
+    used directly.  queries int32 [q] (any length — padded to the block
+    multiple internally).  rank_map/widths: precomputed companions
+    (derived on the fly when a bare matrix is passed without them).
     Returns (found [q] bool, rank [q] int32, level_found [q] int32)."""
+    if hasattr(level_keys, "rank_map"):        # index plane struct
+        plane = level_keys
+        level_keys = jnp.asarray(plane.keys)
+        if rank_map is None:
+            rank_map = jnp.asarray(plane.rank_map)
+        if widths is None:
+            widths = jnp.asarray(plane.widths)
     n_levels, width = level_keys.shape
     nq = queries.shape[0]
     if nq == 0:
@@ -252,7 +266,10 @@ def splay_search_full(level_keys, queries, query_block: int =
                       DEFAULT_QUERY_BLOCK, interpret: bool = True):
     """Seed baseline: the full [n_levels, width] matrix is a single
     constant-index block (always resident; O(L·W) compare per query
-    block).  Queries of any length — padded internally."""
+    block).  Queries of any length — padded internally.  Accepts an
+    index plane struct in place of the bare matrix."""
+    if hasattr(level_keys, "rank_map"):        # index plane struct
+        level_keys = jnp.asarray(level_keys.keys)
     n_levels, width = level_keys.shape
     nq = queries.shape[0]
     if nq == 0:

@@ -49,6 +49,11 @@ def default_rules(multi_pod: bool = False,
         "state": None,
         "conv": None,
         "frames": None,
+        # splay index plane (core/device_index.py, DESIGN.md §5.3): the
+        # [L, W] rectangle replicates over levels and width-shards over
+        # the model axis; divisibility fallback replicates small planes.
+        "splay_level": None,
+        "splay_width": ("model",),
         None: None,
     }
     return rules
@@ -133,6 +138,21 @@ def named_sharding(shape: Sequence[int],
     if mesh is None:
         return None
     return NamedSharding(mesh, resolve_spec(shape, names))
+
+
+def constrain_index_plane(plane):
+    """Apply the splay index-plane rules to a level-array pytree
+    (``device_index.DeviceLevelArrays``): the [L, W] rectangle and rank
+    map follow ("splay_level", "splay_width") — width-sharded when W
+    divides the model axis, replicated otherwise — and the 1-D
+    widths/heights companions follow their own axis.  No-op without an
+    active mesh, so serving loops can call it unconditionally."""
+    return type(plane)(
+        keys=constrain(plane.keys, "splay_level", "splay_width"),
+        widths=constrain(plane.widths, "splay_level"),
+        heights=constrain(plane.heights, "splay_width"),
+        rank_map=constrain(plane.rank_map, "splay_level", "splay_width"),
+        slots=constrain(plane.slots, "splay_width"))
 
 
 def gather_param(w: jax.Array, *storage_names: Optional[str]) -> jax.Array:

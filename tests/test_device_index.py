@@ -1,0 +1,218 @@
+"""Device-resident index plane vs the host numpy oracle (DESIGN.md §5.3).
+
+The contract under test: ``build_device``/``from_state_device``/
+``refresh_device`` produce level arrays bit-identical to the host
+``level_arrays.build`` on the same state, at stable shapes, across
+insert/delete/height-churn epoch streams — with the level arrays never
+leaving the device (the epoch loop is one jit; the jaxpr is asserted
+callback-free)."""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import device_index as dix
+from repro.core import level_arrays as la
+from repro.core import splaylist as sx
+from repro.kernels import ops, ref
+
+
+def _assert_plane_equal(plane: dix.DeviceLevelArrays, host: la.LevelArrays,
+                        msg=""):
+    for f in ("keys", "widths", "heights", "rank_map"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(plane, f)), getattr(host, f),
+            err_msg=f"{f} {msg}")
+
+
+@pytest.mark.parametrize("n,hmax,min_levels", [
+    (0, 1, 2), (1, 1, 2), (57, 4, 2), (300, 6, 3),
+    (123, 1, 8),          # empty top rows (min_levels >> max height)
+    (500, 7, 2),
+])
+def test_build_device_matches_host(n, hmax, min_levels):
+    rng = np.random.default_rng(n + hmax)
+    keys = rng.choice(10 ** 6, n, replace=False).astype(np.int32)
+    heights = rng.integers(0, hmax, n).astype(np.int32)
+    host = la.build(keys, heights, min_levels=min_levels)
+    n_levels, width = host.keys.shape
+    kp = np.full(width, dix.PAD_KEY, np.int32)
+    hp = np.zeros(width, np.int32)
+    kp[:n], hp[:n] = keys, heights
+    dev = dix.build_device(jnp.asarray(kp), jnp.asarray(hp),
+                           n_levels=n_levels)
+    _assert_plane_equal(dev, host)
+
+
+def _seed_state(pool, cap=256, ml=12):
+    st = sx.make(capacity=cap, max_level=ml)
+    st, _, _ = sx.run_ops(
+        st, jnp.full((len(pool),), sx.OP_INSERT, jnp.int32),
+        jnp.asarray(np.asarray(pool, np.int32)),
+        jnp.ones((len(pool),), bool))
+    return st
+
+
+def test_refresh_device_differential_mixed_epochs():
+    """Insert/delete/height-churn streams: after every epoch the
+    incrementally-refreshed plane equals a from-scratch host build at
+    the same (stable) shape, and the slot map stays live-valid."""
+    pool = list(range(0, 160, 2))
+    st = _seed_state(pool)
+    W, L = 254, 12
+    plane = dix.from_state_device(st, n_levels=L, width=W)
+    _assert_plane_equal(plane, la.from_state(st, min_levels=L, width=W))
+    r = random.Random(1)
+    for epoch in range(10):
+        kinds, ks, ups = [], [], []
+        for _ in range(64):
+            x = r.random()
+            if x < 0.55:
+                kinds.append(sx.OP_CONTAINS); ks.append(r.choice(pool))
+            elif x < 0.75:
+                kinds.append(sx.OP_INSERT); ks.append(r.randrange(0, 400))
+            else:
+                kinds.append(sx.OP_DELETE)
+                ks.append(r.choice(pool + list(range(1, 400, 7))))
+            ups.append(r.random() < 0.7)
+        st, _, _ = sx.run_ops(
+            st, jnp.asarray(np.asarray(kinds, np.int32)),
+            jnp.asarray(np.asarray(ks, np.int32)), jnp.asarray(ups))
+        plane = dix.refresh_device(st, plane, max_new=64)
+        assert plane.keys.shape == (L, W)      # stable, no recompiles
+        _assert_plane_equal(
+            plane, la.from_state(st, min_levels=L, width=W),
+            msg=f"epoch {epoch}")
+        w_bot = int(plane.widths[-1])
+        slots = np.asarray(plane.slots)[:w_bot]
+        assert (np.asarray(st.key)[slots]
+                == np.asarray(plane.keys)[-1][:w_bot]).all()
+
+
+def test_refresh_device_height_only_epochs():
+    pool = list(range(0, 120, 2))
+    st = _seed_state(pool)
+    plane = dix.from_state_device(st, n_levels=12, width=254)
+    for _ in range(3):
+        qs = jnp.asarray(np.asarray(pool[:5] * 30, np.int32))
+        st, _, _ = sx.run_contains_batch(st, qs,
+                                         jnp.ones((len(qs),), bool))
+        plane = dix.refresh_device(st, plane, max_new=64)
+        _assert_plane_equal(
+            plane, la.from_state(st, min_levels=12, width=254))
+
+
+def test_refresh_device_survives_rebuild():
+    """A delete-heavy epoch triggers splaylist.rebuild, which compacts
+    slots and invalidates the plane's slot map — the refresh must detect
+    staleness and re-derive it (scatter fallback), still bit-exact."""
+    pool = list(range(0, 100, 2))
+    st = _seed_state(pool)
+    plane = dix.from_state_device(st, n_levels=12, width=254)
+    dels = np.asarray(pool[:40], np.int32)
+    st, _, _ = sx.run_ops(
+        st, jnp.full((len(dels),), sx.OP_DELETE, jnp.int32),
+        jnp.asarray(dels), jnp.ones((len(dels),), bool))
+    plane = dix.refresh_device(st, plane, max_new=64)
+    _assert_plane_equal(plane, la.from_state(st, min_levels=12, width=254))
+    # and the re-derived slot map carries into the next epoch cleanly
+    ins = np.asarray([1, 3, 9], np.int32)
+    st, _, _ = sx.run_ops(
+        st, jnp.full((3,), sx.OP_INSERT, jnp.int32), jnp.asarray(ins),
+        jnp.ones((3,), bool))
+    plane = dix.refresh_device(st, plane, max_new=64)
+    _assert_plane_equal(plane, la.from_state(st, min_levels=12, width=254))
+
+
+def test_refresh_device_transient_empty_keeps_shape():
+    pool = list(range(0, 40, 2))
+    st = _seed_state(pool, cap=128)
+    plane = dix.from_state_device(st, n_levels=12, width=126)
+    dels = np.asarray(pool, np.int32)
+    st, _, _ = sx.run_ops(
+        st, jnp.full((len(dels),), sx.OP_DELETE, jnp.int32),
+        jnp.asarray(dels), jnp.ones((len(dels),), bool))
+    plane = dix.refresh_device(st, plane, max_new=64)
+    assert plane.keys.shape == (12, 126)
+    assert int(plane.widths[-1]) == int(st.size)   # may be 0 or tiny
+    # refresh out of the empty works too
+    st, _, _ = sx.run_ops(
+        st, jnp.full((3,), sx.OP_INSERT, jnp.int32),
+        jnp.asarray(np.asarray([5, 7, 11], np.int32)),
+        jnp.ones((3,), bool))
+    plane = dix.refresh_device(st, plane, max_new=64)
+    _assert_plane_equal(plane, la.from_state(st, min_levels=12, width=126))
+
+
+def test_run_epoch_and_serving_loop_on_device():
+    """The jitted epoch loop: batched contains + inserts + device
+    refresh under one jit, no host callbacks in the jaxpr, final plane
+    bit-identical to the host build of the final state."""
+    pool = list(range(0, 200, 4))
+    st = _seed_state(pool, cap=512, ml=14)
+    W, L = 510, 14
+    plane = dix.from_state_device(st, n_levels=L, width=W)
+
+    E, B = 5, 32
+    rng = np.random.default_rng(3)
+    kinds = rng.choice([sx.OP_CONTAINS, sx.OP_CONTAINS, sx.OP_CONTAINS,
+                        sx.OP_INSERT], (E, B)).astype(np.int32)
+    keys = rng.choice(np.arange(0, 220), (E, B)).astype(np.int32)
+    ups = rng.random((E, B)) < 0.6
+
+    jaxpr = jax.make_jaxpr(
+        lambda s, p, k, q, u: sx.run_serving(s, p, k, q, u))(
+            st, plane, jnp.asarray(kinds), jnp.asarray(keys),
+            jnp.asarray(ups))
+    prims = {e.primitive.name for e in jaxpr.jaxpr.eqns}
+    assert not prims & {"pure_callback", "io_callback", "callback"}
+
+    st2, plane2, res, plen = sx.run_serving(
+        st, plane, jnp.asarray(kinds), jnp.asarray(keys),
+        jnp.asarray(ups))
+    assert res.shape == plen.shape == (E, B)
+    _assert_plane_equal(plane2, la.from_state(st2, min_levels=L, width=W))
+
+    # aggregate (flat-combined contains) epoch variant
+    st3, plane3, res3, _ = sx.run_epoch(
+        st, plane, jnp.asarray(kinds[0]), jnp.asarray(keys[0]),
+        jnp.asarray(ups[0]), aggregate=True)
+    _assert_plane_equal(plane3, la.from_state(st3, min_levels=L, width=W))
+    assert res3.shape == (B,)
+
+
+def test_kernels_consume_device_plane():
+    """The search wrappers take the plane struct directly; results match
+    the jnp reference oracle on the same rectangle."""
+    pool = list(range(0, 256, 2))
+    st = _seed_state(pool, cap=512, ml=14)
+    plane = dix.from_state_device(st, n_levels=14, width=510)
+    rng = np.random.default_rng(5)
+    qs = jnp.asarray(np.concatenate(
+        [rng.choice(pool, 100), rng.integers(0, 300, 60)]).astype(np.int32))
+    f, r, lv = ops.splay_search(plane, qs)
+    f0, r0, lv0 = ref.splay_search_ref(jnp.asarray(plane.keys), qs)
+    np.testing.assert_array_equal(np.asarray(f), np.asarray(f0))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r0))
+    np.testing.assert_array_equal(np.asarray(lv), np.asarray(lv0))
+    out_full = ops.splay_search_full(plane, qs)
+    for a, b in zip((f, r, lv), out_full):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_from_state_device_pads_small_states():
+    """capacity < width: the plane pads out to the requested rectangle
+    (serving reserves width for growth)."""
+    pool = [4, 8, 15]
+    st = _seed_state(pool, cap=64)
+    plane = dix.from_state_device(st, n_levels=12, width=256)
+    assert plane.keys.shape == (12, 256)
+    _assert_plane_equal(plane, la.from_state(st, min_levels=12, width=256))
+    st, _, _ = sx.run_ops(
+        st, jnp.full((1,), sx.OP_INSERT, jnp.int32),
+        jnp.asarray(np.asarray([6], np.int32)), jnp.ones((1,), bool))
+    plane = dix.refresh_device(st, plane, max_new=8)
+    _assert_plane_equal(plane, la.from_state(st, min_levels=12, width=256))

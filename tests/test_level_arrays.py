@@ -103,6 +103,35 @@ def test_refresh_falls_back_on_membership_change():
     _check_invariants(out)
 
 
+def test_refresh_preserves_shape_on_transient_empty():
+    """Regression: a delete-everything epoch must keep the previous
+    (n_levels, width) rectangle — jit consumers key their caches on the
+    shape, and transient empties are routine in delete-heavy serving."""
+    pool = list(range(0, 50, 2))
+    st = _make_state(pool, n_ops=100, seed=5, cap=128)
+    prev = la.from_state(st, min_levels=6)
+    dels = jnp.asarray(np.asarray(pool, np.int32))
+    st2, _, _ = sx.run_ops(
+        st, jnp.full((len(pool),), sx.OP_DELETE, jnp.int32), dels,
+        jnp.ones((len(pool),), bool))
+    out = la.refresh(st2, prev, min_levels=2)
+    assert out.keys.shape == prev.keys.shape
+    assert (out.widths == 0).all()
+    assert (out.keys == la.PAD_KEY).all()
+    np.testing.assert_array_equal(out.rank_map[-1],
+                                  np.arange(prev.keys.shape[1]))
+    _check_invariants(out)
+    # and refreshing out of the empty restores membership at that shape
+    ins = jnp.asarray(np.asarray(pool[:4], np.int32))
+    st3, _, _ = sx.run_ops(
+        st2, jnp.full((4,), sx.OP_INSERT, jnp.int32), ins,
+        jnp.ones((4,), bool))
+    out2 = la.refresh(st3, out, min_levels=2)
+    assert out2.keys.shape == prev.keys.shape
+    bottom = out2.keys[-1][out2.keys[-1] != la.PAD_KEY]
+    assert set(bottom.tolist()) == set(pool[:4])
+
+
 def test_vectorized_build_matches_row_loop_reference():
     """The prefix-sum construction against the obvious per-row filter."""
     rng = np.random.default_rng(9)

@@ -1,0 +1,110 @@
+"""splaylist.rebuild (Section 2.2) differential coverage: streams that
+actually trigger ``_maybe_rebuild`` (delete-heavy, ``2*dhits >= m``),
+asserting keys, heights, and counter invariants against the Python
+oracle after each rebuild-crossing run."""
+
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ref_py
+from repro.core import splaylist as sx
+
+
+def _run_both(stream, ml=16, cap=512):
+    st = sx.make(capacity=cap, max_level=ml)
+    st, res, plen = sx.run_ops(
+        st, jnp.asarray(np.asarray([s[0] for s in stream], np.int32)),
+        jnp.asarray(np.asarray([s[1] for s in stream], np.int32)),
+        jnp.asarray(np.asarray([s[2] for s in stream], bool)))
+    oracle = ref_py.SplayList(max_level=ml, p=0.5)
+    ores = []
+    for kind, k, u in stream:
+        if kind == sx.OP_CONTAINS:
+            ores.append(oracle.contains(k, upd=u))
+        elif kind == sx.OP_INSERT:
+            ores.append(oracle.insert(k, upd=u))
+        else:
+            ores.append(oracle.delete(k, upd=u))
+    return st, np.asarray(res), oracle, np.asarray(ores)
+
+
+def _alive_selfhits(st: sx.SplayState) -> dict:
+    s = sx.to_numpy(st)
+    idx = np.arange(st.capacity)
+    alive = ((idx >= 2) & (idx < int(s["n_alloc"])) & ~s["deleted"]
+             & (s["key"] < sx.POS_INF_32))
+    return {int(k): int(h) for k, h in
+            zip(s["key"][alive], s["selfhits"][alive])}
+
+
+def _check_against_oracle(st, oracle):
+    assert oracle.heights() == sx.heights(st)
+    assert oracle.m == int(st.m)
+    assert oracle.deleted_hits == int(st.dhits)
+    assert oracle.zero_level == int(st.zl)
+    assert oracle.size == int(st.size)
+    o_sh = {n.key: n.selfhits for n in oracle.items() if not n.deleted}
+    assert o_sh == _alive_selfhits(st)
+
+
+@pytest.mark.parametrize("seed,n_keys", [(0, 120), (7, 80), (13, 200)])
+def test_rebuild_differential_delete_heavy(seed, n_keys):
+    """Delete-heavy mixed stream: several rebuilds fire; after the run
+    the engines agree on results, membership, heights, selfhits, and
+    every counter the rebuild resets (m, dhits, zl)."""
+    rng = random.Random(seed)
+    pool = list(range(0, 2 * n_keys, 2))
+    stream = [(sx.OP_INSERT, k, True) for k in pool]
+    for _ in range(1500):
+        x = rng.random()
+        k = rng.choice(pool)
+        if x < 0.35:
+            stream.append((sx.OP_CONTAINS, k, True))
+        elif x < 0.5:
+            stream.append((sx.OP_INSERT, k, rng.random() < 0.5))
+        else:
+            stream.append((sx.OP_DELETE, k, True))
+    st, res, oracle, ores = _run_both(stream)
+    assert oracle.rebuilds >= 2          # the stream must cross rebuilds
+    assert (res == ores).all()
+    _check_against_oracle(st, oracle)
+    # rebuild's own invariant: dhits was reset and stayed low relative
+    # to m (a fresh rebuild would have fired otherwise)
+    assert 2 * int(st.dhits) < int(st.m) or int(st.m) == 0
+
+
+def test_rebuild_to_empty_and_back():
+    """Deleting everything forces a rebuild down to an empty structure;
+    inserts after it must behave like a fresh list (allocator reset)."""
+    pool = list(range(0, 60, 3))
+    stream = [(sx.OP_INSERT, k, True) for k in pool]
+    stream += [(sx.OP_DELETE, k, True) for k in pool]
+    stream += [(sx.OP_INSERT, k, True) for k in pool[:10]]
+    stream += [(sx.OP_CONTAINS, k, True) for k in pool[:10]]
+    st, res, oracle, ores = _run_both(stream, cap=128)
+    assert oracle.rebuilds >= 1
+    assert (res == ores).all()
+    _check_against_oracle(st, oracle)
+    assert int(st.size) == 10
+
+
+def test_rebuild_resets_heights_to_frequency_calibration():
+    """Post-rebuild heights follow the weighted-median split: the
+    hammered key keeps a height >= any singleton key (Lemma 2 carries
+    through the rebuild)."""
+    pool = list(range(0, 100, 2))
+    hot = pool[0]
+    stream = [(sx.OP_INSERT, k, True) for k in pool]
+    stream += [(sx.OP_CONTAINS, hot, True)] * 100
+    # delete the cold tail, then re-hit a marked key until the deleted
+    # mass trips 2*dhits >= m
+    stream += [(sx.OP_DELETE, k, True) for k in pool[10:]]
+    stream += [(sx.OP_DELETE, pool[10], True)] * 50
+    st, _, oracle, _ = _run_both(stream, ml=18)
+    assert oracle.rebuilds >= 1
+    _check_against_oracle(st, oracle)
+    h = sx.heights(st)
+    assert h[hot] == max(h.values())

@@ -35,6 +35,39 @@ def test_resolve_spec_no_axis_reuse():
     assert spec == jax.sharding.PartitionSpec("data")  # b falls back
 
 
+def test_splay_index_plane_rules():
+    """The index plane resolves to (replicated, width-sharded) and falls
+    back to full replication when the width doesn't divide."""
+    mesh = _mesh11()
+    rules = shd.default_rules()
+    spec = shd.resolve_spec((6, 4096), ("splay_level", "splay_width"),
+                            mesh, rules)
+    assert spec == jax.sharding.PartitionSpec(None, "model")
+    # width rule pointing at an axis absent from the mesh -> replicate
+    spec = shd.resolve_spec(
+        (6, 4096), ("splay_level", "splay_width"), mesh,
+        {"splay_level": None, "splay_width": ("expert_axis",)})
+    assert spec == jax.sharding.PartitionSpec()
+
+
+def test_constrain_index_plane_roundtrip():
+    import jax.numpy as jnp
+    from repro.core import device_index as dix
+    plane = dix.build_device(
+        jnp.asarray(np.arange(0, 128, 2, dtype=np.int32)),
+        jnp.asarray(np.zeros(64, np.int32)), n_levels=3)
+    # no mesh: identity
+    out = shd.constrain_index_plane(plane)
+    np.testing.assert_array_equal(np.asarray(out.keys),
+                                  np.asarray(plane.keys))
+    with shd.use_mesh(_mesh11(), shd.default_rules()):
+        out = shd.constrain_index_plane(plane)
+    np.testing.assert_array_equal(np.asarray(out.keys),
+                                  np.asarray(plane.keys))
+    np.testing.assert_array_equal(np.asarray(out.rank_map),
+                                  np.asarray(plane.rank_map))
+
+
 def test_constrain_noop_without_mesh():
     import jax.numpy as jnp
     x = jnp.ones((4, 4))

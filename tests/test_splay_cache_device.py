@@ -1,0 +1,92 @@
+"""SplayVocabCache device refresh vs the retained numpy oracle: the
+heights calibration (one formula, host + jitted mirror) and the
+hot-set selection with hysteresis must agree exactly."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import splay_cache as sc
+from repro.core.splay_cache import SplayVocabCache
+from repro.core.workload import zipf_token_ids
+
+
+def _drive(cache, vocab, steps=30, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        cache.observe(zipf_token_ids(rng, vocab, (4, 64)))
+    return cache
+
+
+@pytest.mark.parametrize("vocab,hot", [(3000, 128), (500, 64),
+                                       (40, 64)])   # hot_size > vocab too
+def test_device_refresh_matches_host_oracle(vocab, hot):
+    dev = _drive(SplayVocabCache(vocab, hot_size=hot, update_prob=1.0,
+                                 refresh_every=10, device=True), vocab)
+    hst = _drive(SplayVocabCache(vocab, hot_size=hot, update_prob=1.0,
+                                 refresh_every=10, device=False), vocab)
+    np.testing.assert_array_equal(dev.hot_ids, hst.hot_ids)
+    np.testing.assert_array_equal(np.asarray(dev.hot_rank), hst.hot_rank)
+
+
+def test_heights_host_and_device_formula_agree():
+    """The Lemma-2 calibration has one host implementation and one
+    jitted mirror — exact integer agreement across magnitudes,
+    including power-of-two boundaries where float log2 used to be a
+    hazard."""
+    rng = np.random.default_rng(1)
+    c = SplayVocabCache(2048, hot_size=64, update_prob=1.0)
+    counts = np.zeros(2048, np.int64)
+    counts[: 512] = rng.integers(1, 1 << 20, 512)
+    counts[: 16] = [1, 2, 3, 4, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64,
+                    65]
+    c.counts = counts
+    c.m = int(counts.sum())
+    h_host = c.heights()
+    h_dev = np.asarray(sc._heights_device(
+        jnp.asarray(np.minimum(counts, 2 ** 31 - 1).astype(np.int32)),
+        np.int32(min(c.m, 2 ** 31 - 1))))
+    np.testing.assert_array_equal(h_host, h_dev)
+    # Lemma 2 shape: counts at exact powers of two step at the boundary
+    assert (np.diff(h_host[:512][np.argsort(counts[:512])]) >= 0).all()
+
+
+def test_int_log2_floor_exact_past_float53():
+    """The int64 fallback path must stay exact where float64 rounds an
+    integer up to the next power of two."""
+    q = np.array([1, 2, 3, 4, 7, 8, (1 << 53) - 1, 1 << 53,
+                  (1 << 54) - 1, (1 << 60) - 1, 1 << 60, (1 << 62) - 1],
+                 np.int64)
+    expect = np.array([v.bit_length() - 1 for v in q.tolist()], np.int64)
+    np.testing.assert_array_equal(sc._int_log2_floor(q), expect)
+
+
+def test_hysteresis_keeps_residents_on_device_path():
+    """A resident id within 2 levels of the admission height must not be
+    evicted by a refresh (the paper's factor-2 separation)."""
+    vocab = 1000
+    c = SplayVocabCache(vocab, hot_size=32, update_prob=1.0,
+                        refresh_every=1, device=True)
+    rng = np.random.default_rng(2)
+    hot = rng.choice(vocab, 32, replace=False)
+    batch = np.repeat(hot, 64)
+    c.observe(batch)
+    first = set(c.hot_ids.tolist())
+    # mild drift: the same ids plus background noise
+    c.observe(np.concatenate([np.repeat(hot, 8),
+                              rng.integers(0, vocab, 256)]))
+    assert len(first & set(c.hot_ids.tolist())) >= 28
+
+
+def test_lookup_matches_table_on_device_path():
+    c = SplayVocabCache(300, hot_size=32, update_prob=1.0,
+                        refresh_every=1, device=True)
+    rng = np.random.default_rng(1)
+    c.observe(rng.integers(0, 300, 4096))
+    assert c._hot_ids_dev is not None       # device refresh ran
+    table = jnp.asarray(rng.normal(size=(300, 16)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 300, 64).astype(np.int32))
+    out = c.lookup(table, ids)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(table[ids]),
+                               rtol=1e-6)
+    assert c.hot_buffer(table).shape[0] == 32   # static shape, jit-stable
