@@ -3,17 +3,22 @@
 PY ?= python
 export PYTHONPATH := src:.
 
-.PHONY: test bench-smoke bench
+.PHONY: test bench-smoke bench check-docs
 
 # tier-1: the full pytest suite (ROADMAP "Tier-1 verify")
 test:
 	$(PY) -m pytest -x -q
 
-# quick perf smoke: kernel race + aggregation + refresh-path race
-# (host vs device_index); writes BENCH_kernels.json
+# quick perf smoke: kernel race + aggregation + refresh-path races
+# (host vs device_index; sharded vs replicated); writes BENCH_kernels.json
 bench-smoke:
 	$(PY) benchmarks/run.py --only kernels_bench
 
 # full benchmark harness (paper-scale sizes)
 bench:
 	$(PY) benchmarks/run.py --full
+
+# docs gate: docs/API.md names resolve against the modules; the README
+# quickstart blocks execute (scripts/check_api_docs.py, CI `docs` job)
+check-docs:
+	$(PY) scripts/check_api_docs.py

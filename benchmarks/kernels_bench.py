@@ -9,7 +9,9 @@ batched-update aggregation (one weighted fold per unique key), and races
 the refresh paths (DESIGN.md §5.3): host ``level_arrays.refresh`` (state
 download + numpy argsort + plane re-upload) vs the device-resident
 ``device_index.refresh_device`` (searchsorted merge, zero host bytes) on
-membership-changing and height-only epochs.
+membership-changing and height-only epochs, plus the width-sharded
+refresh (``refresh_device_sharded``) against the replicated one on a
+forced 1x4 host mesh (subprocess probe, DESIGN.md §5.4).
 
 Emits the usual CSV lines AND returns a machine-readable payload which
 ``benchmarks/run.py`` writes to ``BENCH_kernels.json`` (op/s, per-level
@@ -20,6 +22,9 @@ PRs.
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
 
 import jax.numpy as jnp
@@ -249,6 +254,30 @@ def _refresh_case(width: int, churn: int, epochs: int, reps: int,
     }
 
 
+def _sharded_refresh_case(width: int) -> dict:
+    """Sharded-vs-replicated refresh race on a forced host mesh
+    (DESIGN.md §5.4).  The mesh needs
+    ``--xla_force_host_platform_device_count`` before jax initializes,
+    so the race runs in a subprocess
+    (``benchmarks/sharded_refresh_probe.py --bench``) that asserts
+    bit-identity and prints one JSON object.  Host-mesh wall clock
+    measures collective overhead, not accelerator scaling — the
+    structural columns (per-shard lanes/bytes) are what transfers."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)            # probe forces its own count
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "benchmarks/sharded_refresh_probe.py",
+         "--bench", "--width", str(width)],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=1200)
+    assert r.returncode == 0, f"probe failed:\n{r.stdout}\n{r.stderr}"
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    emit(f"refresh_sharded_w{width}", out["us_per_epoch_sharded"],
+         f"replicated_us={out['us_per_epoch_replicated']:.1f};"
+         f"shards={out['shards']};bit_identical={out['bit_identical']}")
+    return out
+
+
 def run(quick: bool = False) -> dict:
     width = 4096 if quick else 8192
     nq = 1024 if quick else 4096
@@ -308,6 +337,9 @@ def run(quick: bool = False) -> dict:
             _refresh_case(width, churn=64, epochs=r_epochs, reps=r_reps),
             _refresh_case(width, churn=0, epochs=r_epochs, reps=r_reps),
         ]
+    # sharded-vs-replicated refresh race (DESIGN.md §5.4), 1x4 host mesh
+    payload["refresh_sharded"] = _sharded_refresh_case(
+        1024 if quick else 4096)
 
     # hot_gather: bytes-touched model (hot hits avoid HBM entirely); the
     # hot set comes from observed counts, as the splay heights do

@@ -1,0 +1,91 @@
+"""Docs-vs-code consistency gate (CI `docs` job; `make check-docs`).
+
+Two checks, both import-the-real-thing:
+
+1. every ``repro.<dotted.name>`` referenced in ``docs/API.md`` resolves
+   by import + getattr (module attributes and class attributes alike) —
+   renames and removals fail the docs build instead of silently rotting
+   the reference;
+2. every ``python`` fenced block in ``README.md`` executes end-to-end
+   (the quickstart is a living test, not a listing).
+
+Run from the repo root:  PYTHONPATH=src python scripts/check_api_docs.py
+"""
+
+from __future__ import annotations
+
+import importlib
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+NAME_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)")
+
+
+def resolve(dotted: str):
+    """Import the longest module prefix, then getattr the rest (walks
+    into classes for method references)."""
+    parts = dotted.split(".")
+    obj, err = None, None
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+            rest = parts[i:]
+            break
+        except ImportError as e:
+            err = e
+    else:
+        raise ImportError(f"{dotted}: no importable prefix ({err})")
+    for attr in rest:
+        obj = getattr(obj, attr)
+    return obj
+
+
+def check_api_names() -> int:
+    text = (REPO / "docs" / "API.md").read_text()
+    names = sorted(set(NAME_RE.findall(text)))
+    bad = []
+    for name in names:
+        try:
+            resolve(name)
+        except (ImportError, AttributeError) as e:
+            bad.append(f"  {name}: {e}")
+    print(f"docs/API.md: {len(names)} dotted names checked, "
+          f"{len(bad)} unresolved")
+    if bad:
+        print("\n".join(bad))
+    return len(bad)
+
+
+def check_readme_snippets() -> int:
+    text = (REPO / "README.md").read_text()
+    blocks = re.findall(r"```python\n(.*?)```", text, flags=re.S)
+    if not blocks:
+        print("README.md: no python blocks found (expected >= 1)")
+        return 1
+    ns: dict = {}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"README.md[python #{i}]", "exec"), ns)
+        except Exception as e:                     # noqa: BLE001
+            print(f"README.md python block #{i} FAILED: {e!r}")
+            return 1
+        print(f"README.md python block #{i} OK "
+              f"({len(block.splitlines())} lines)")
+    return 0
+
+
+def main() -> int:
+    sys.path.insert(0, str(REPO / "src"))
+    failures = check_api_names()
+    failures += check_readme_snippets()
+    if failures:
+        print(f"FAILED: {failures} docs check(s)")
+        return 1
+    print("DOCS OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

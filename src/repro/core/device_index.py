@@ -19,7 +19,15 @@ module keeps the same layout but makes it live where it is consumed:
     merged into the previous sorted bottom row by ``top_k`` +
     ``searchsorted`` rank arithmetic (deletions are masked out by
     absence), and the prefix-sum re-layering reruns — no
-    full-membership sort, no host transfer, no shape change.
+    full-membership sort, no host transfer, no shape change; with
+    ``return_overflow=True`` it also reports the alive keys it could
+    not represent (DESIGN.md §5.4 rebuild protocol);
+  * :func:`refresh_device_sharded` — the same pipeline under
+    ``shard_map`` over the ``splay_width`` logical axis: each shard
+    owns a contiguous key range (W/S columns of the sorted bottom row),
+    boundary halos travel by ``ppermute``, prefix sums compose via
+    exclusive cross-shard scans, and overflow is all-reduced — the
+    scaling path for planes larger than one device's memory.
 
 Scatter- and sort-free by construction (the hot path): XLA lowers
 gathers, cumsums and ``top_k`` to tight vectorized loops on every
@@ -57,7 +65,15 @@ PAD_KEY = sx.POS_INF_32
 
 class DeviceLevelArrays(NamedTuple):
     """The TPU-native splay layout, device-resident (same fields and
-    semantics as ``level_arrays.LevelArrays`` plus the slot map)."""
+    semantics as ``level_arrays.LevelArrays`` plus the slot map).
+
+    Arrays are *global*: a width-sharded plane
+    (``sharding.shard_index_plane``) keeps these exact shapes and
+    values and only changes placement — ``keys``/``rank_map`` split
+    their width dimension over the mesh's model axis, ``heights``/
+    ``slots`` likewise, ``widths`` replicates.  ``slots`` pad lanes
+    (columns at or beyond the bottom row's live width) are unspecified
+    and must not be read."""
     keys: jax.Array        # int32 [L, W], +INF padded, sorted, nested
     widths: jax.Array      # int32 [L], live entries per row
     heights: jax.Array     # int32 [W], splay height of bottom-row keys
@@ -133,7 +149,14 @@ def build_device(keys: jax.Array, rel_h: jax.Array,
     (-1): fine for kernel fixtures; planes that will be *refreshed*
     against a state should come from :func:`from_state_device`, which
     fills it (a -1 slot map just makes the first refresh take the
-    scatter fallback and re-derive it)."""
+    scatter fallback and re-derive it).
+
+    Sharding: replicated math — inputs/outputs live whole on each
+    device; lay the result out width-sharded afterwards with
+    ``sharding.shard_index_plane``.  Failure modes: more than ``width``
+    live keys cannot be represented (the largest keys silently pad out
+    — size ``width`` to bound the key count); heights above
+    ``n_levels - 1`` saturate into row 0."""
     keys = keys.astype(jnp.int32)
     h = jnp.where(keys != PAD_KEY, rel_h.astype(jnp.int32), 0)
     ks, hs = jax.lax.sort((keys, h), num_keys=1)
@@ -159,7 +182,15 @@ def from_state_device(st: sx.SplayState, n_levels: int,
     """Build a fresh plane from a splay-list state, fully on device.
     ``width`` must bound the alive-key count (``capacity - 2`` always
     does); ``n_levels`` must bound relative heights (``max_level``
-    always does)."""
+    always does).
+
+    This is also the overflow-recovery rebuild: after a refresh reports
+    nonzero overflow, one ``from_state_device`` at the same (static)
+    shape folds every dropped key back in (``splaylist.run_epoch``
+    schedules it automatically; DESIGN.md §5.4).  Sharding: replicated
+    math, like :func:`build_device`.  Failure modes: alive counts
+    beyond ``width`` truncate (largest keys) — undetectable here, but
+    counted by the refresh paths' ``overflow_count``."""
     keys, rel_h = _alive_slots(st)
     slot_ids = jnp.arange(st.capacity, dtype=jnp.int32)
     ks, hs, sl = jax.lax.sort((keys, rel_h, slot_ids), num_keys=1)
@@ -172,25 +203,33 @@ def from_state_device(st: sx.SplayState, n_levels: int,
 
 
 def _merge_rows(bottom, surv, old_h, slots_eff, ns, new_h, new_slots,
-                n_new, width, kk):
+                n_new, width, kk, out_len=None):
     """Two-way merge of the surviving previous bottom row with the
     sorted inserted keys, gather-only: compact the survivors (inverse
     prefix sum), place each survivor at (survivors before it) + (new
     keys below it), and read the merged row back through one
-    searchsorted over those positions."""
-    col = jnp.arange(width, dtype=jnp.int32)
+    searchsorted over those positions.
+
+    ``out_len`` is the emitted row length — ``width`` for the replicated
+    refresh (merged lanes beyond it are truncated, flagged upstream as
+    overflow), ``width + kk`` for the per-shard merge of the sharded
+    refresh, whose local segment must never truncate (the global
+    redistribution repacks it)."""
+    if out_len is None:
+        out_len = width
+    col = jnp.arange(out_len, dtype=jnp.int32)
     surv_i = surv.astype(jnp.int32)
     cs_s = jnp.cumsum(surv_i)
     n_old = cs_s[width - 1]
     take_a = _compact_take(cs_s, width)
-    a_k = jnp.where(col < n_old, jnp.take(bottom, take_a), PAD_KEY)
+    acol = jnp.arange(width, dtype=jnp.int32)
+    a_k = jnp.where(acol < n_old, jnp.take(bottom, take_a), PAD_KEY)
     a_h = jnp.take(old_h, take_a)
     a_s = jnp.take(slots_eff, take_a)
 
     # merged position of survivor i; strictly increasing (pad lanes
     # continue past the live prefix), so it is searchsorted-invertible
-    pos_a = (jnp.arange(width, dtype=jnp.int32)
-             + jnp.searchsorted(ns, a_k).astype(jnp.int32))
+    pos_a = (acol + jnp.searchsorted(ns, a_k).astype(jnp.int32))
     a_of = jnp.searchsorted(pos_a, col).astype(jnp.int32)
     a_ofc = jnp.minimum(a_of, width - 1)
     from_a = jnp.take(pos_a, a_ofc) == col
@@ -208,9 +247,10 @@ def _merge_rows(bottom, surv, old_h, slots_eff, ns, new_h, new_slots,
     return merged_k, merged_h, merged_s
 
 
-@functools.partial(jax.jit, static_argnames=("max_new",))
+@functools.partial(jax.jit,
+                   static_argnames=("max_new", "return_overflow"))
 def refresh_device(st: sx.SplayState, prev: DeviceLevelArrays,
-                   max_new: int = 1024) -> DeviceLevelArrays:
+                   max_new: int = 1024, return_overflow: bool = False):
     """Incremental on-device rebuild after a rebalance epoch.
 
     Membership changes are folded without re-sorting the key set (the
@@ -222,9 +262,10 @@ def refresh_device(st: sx.SplayState, prev: DeviceLevelArrays,
          come back through the plane's slot map (pure gathers); deleted
          keys are masked out by absence;
       3. the newly inserted keys are extracted *sorted* by one bounded
-         ``top_k`` (``max_new`` — size it by the epoch batch; inserts
-         beyond it are dropped until the next full build), then placed
-         by mirrored rank arithmetic;
+         ``top_k`` (``max_new`` — size it by the number of inserts since
+         the last refresh; the *smallest* keys are kept, inserts beyond
+         the bound are dropped from the plane until the next full
+         build), then placed by mirrored rank arithmetic;
       4. the prefix-sum re-layering reruns on the merged row.
 
     The slot map is validated against the state (``rebuild`` compacts
@@ -236,6 +277,19 @@ def refresh_device(st: sx.SplayState, prev: DeviceLevelArrays,
     row 0 (pick ``n_levels = state.max_level`` to rule this out); alive
     counts beyond ``width`` cannot be represented — size the plane by
     ``capacity - 2`` to rule that out too.
+
+    Sharding: every input is replicated math — state and plane live in
+    full on each device (use :func:`refresh_device_sharded` for a
+    width-sharded plane).  Failure modes are *counted, not raised*: with
+    ``return_overflow=True`` the result is ``(plane, overflow_count)``
+    where ``overflow_count`` (int32 scalar) is the number of alive keys
+    the refreshed plane could not represent — inserts beyond ``max_new``
+    plus merged lanes beyond ``width``.  A nonzero count means the plane
+    is *stale, not corrupt*: it still indexes the keys it holds, and a
+    full :func:`from_state_device` rebuild (which ``splaylist.run_epoch``
+    schedules automatically on the next epoch) restores exactness —
+    unless the alive count itself exceeds ``width``, which no same-shape
+    rebuild can fix; rebuild wider at the host level.
     """
     n_levels, width = prev.keys.shape
     cap = st.capacity
@@ -278,7 +332,8 @@ def refresh_device(st: sx.SplayState, prev: DeviceLevelArrays,
 
     # ---- new keys: bounded top_k extracts them already sorted ------------
     kk = min(max_new, cap)
-    n_new = jnp.minimum(jnp.sum(is_new.astype(jnp.int32)), kk)
+    n_new_raw = jnp.sum(is_new.astype(jnp.int32))
+    n_new = jnp.minimum(n_new_raw, kk)
 
     def extract_new(_):
         neg = jnp.where(is_new, -k_slot, -jnp.int32(PAD_KEY))
@@ -308,12 +363,281 @@ def refresh_device(st: sx.SplayState, prev: DeviceLevelArrays,
     merged_k, merged_h, merged_s = jax.lax.cond(
         (n_new == 0) & (n_old == w_bot), identity_merge, merge,
         operand=None)
-    return _assemble_device(merged_k, merged_h, merged_s, n_levels)
+    plane = _assemble_device(merged_k, merged_h, merged_s, n_levels)
+    if not return_overflow:
+        return plane
+    overflow = ((n_new_raw - n_new)
+                + jnp.maximum(n_old + n_new - width, 0)).astype(jnp.int32)
+    return plane, overflow
+
+
+# ---------------------------------------------------------------------------
+# width-sharded refresh (DESIGN.md §5.4): the same pipeline under shard_map
+# ---------------------------------------------------------------------------
+
+def _refresh_shard_body(st: sx.SplayState, prev: DeviceLevelArrays, *,
+                        axis: str, n_shards: int, n_levels: int,
+                        width: int, max_new: int):
+    """Per-shard body of :func:`refresh_device_sharded` (runs under
+    ``shard_map``; ``prev`` leaves are this shard's blocks, the state is
+    replicated).  Stages mirror the replicated refresh — classification,
+    bounded extraction, merge, re-layering — with three collectives
+    stitching the shards together:
+
+      1. *halo/boundary exchange* (``ppermute`` + scalar ``all_gather``):
+         each shard's owned key range is [its block's first bottom-row
+         key, the right neighbour's first key) — the range-boundary
+         table of the sorted bottom row;
+      2. *cross-shard exclusive scans* (``all_gather`` of per-shard
+         totals + cumsum): compose the new-key drop cap, the merged-row
+         offsets, and every level's prefix sum globally;
+      3. *segment redistribution* (``all_gather`` of the compacted local
+         merges): membership churn moves keys across shard boundaries
+         arbitrarily far (a delete burst can empty whole shards), so the
+         packed global bottom row is rebuilt from the bounded per-shard
+         segments rather than fixed-radius halos.
+
+    Budget per shard and epoch: resident state O(L·W/S) (its plane
+    blocks) + O(W) transient bottom-row/composed-row buffers (the
+    [L, W] rectangle is never materialized on one shard — the composed
+    prefix sum streams one row per scan step); compute for the per-lane
+    stages (classification gathers, merge, compaction searchsorted,
+    rank emission) O((L·W/S)·log W + capacity); wire O(W + S·max_new)
+    for the segment exchange plus O(W) received per level row of the
+    streamed composition."""
+    S = n_shards
+    wl = width // S
+    cap = st.capacity
+    kk = min(max_new, cap)
+    ax = jax.lax.axis_index(axis)
+    col_l = jnp.arange(wl, dtype=jnp.int32)
+    col_g = (ax * wl + col_l).astype(jnp.int32)
+
+    bot_l = prev.keys[n_levels - 1]                    # [wl] own block
+    w_bot = prev.widths[n_levels - 1]                  # global (replicated)
+
+    # ---- owned key range: block's first key .. right neighbour's first
+    first = bot_l[:1]
+    halo = jax.lax.ppermute(first, axis,
+                            [(i, (i - 1) % S) for i in range(S)])
+    lo = jnp.where(ax == 0, jnp.int32(sx.NEG_INF_32), bot_l[0])
+    hi = jnp.where(ax == S - 1, jnp.int32(PAD_KEY), halo[0])
+
+    # ---- slot-map validation (staleness is a global verdict, psum'd,
+    # so every shard takes the same branch as the replicated refresh)
+    lane = col_g < w_bot
+    sc = jnp.clip(prev.slots, 0, cap - 1)
+    match = lane & (jnp.take(st.key, sc).astype(jnp.int32) == bot_l)
+    stale = jax.lax.psum(
+        jnp.any(lane & ~match).astype(jnp.int32), axis) > 0
+
+    # ---- state-side classification, restricted to the owned range
+    k_slot, _ = _alive_slots(st)
+    alive = k_slot != PAD_KEY
+    owned = alive & (k_slot >= lo) & (k_slot < hi)
+    p = jnp.searchsorted(bot_l, k_slot).astype(jnp.int32)
+    pc = jnp.clip(p, 0, wl - 1)
+    in_block = owned & (jnp.take(bot_l, pc) == k_slot)
+    is_new = owned & ~in_block
+
+    def via_map(_):
+        surv = match & ~jnp.take(st.deleted, sc)
+        return surv, sc
+
+    def via_scatter(_):
+        dst = jnp.where(in_block, pc, wl)
+        surv = jnp.zeros((wl,), bool).at[dst].set(True, mode="drop")
+        slots = jnp.full((wl,), -1, jnp.int32).at[dst].set(
+            jnp.arange(cap, dtype=jnp.int32), mode="drop")
+        return surv, slots
+
+    surv, slots_eff = jax.lax.cond(stale, via_scatter, via_map,
+                                   operand=None)
+    old_h = (jnp.take(st.top, jnp.clip(slots_eff, 0, cap - 1))
+             - st.zl).astype(jnp.int32)
+
+    # ---- new keys: per-shard bounded top_k + the cross-shard drop cap.
+    # Ranges ascend with the shard index, so "the globally smallest kk
+    # new keys" = take shards left-to-right until the budget is spent —
+    # an exclusive scan of raw counts reproduces the replicated drop
+    # semantics exactly.
+    raw = jnp.sum(is_new.astype(jnp.int32))
+    raws = jax.lax.all_gather(raw, axis)               # [S]
+    left = jnp.sum(jnp.where(jnp.arange(S) < ax, raws, 0))
+    total_raw = jnp.sum(raws)
+    n_new = jnp.clip(kk - left, 0, jnp.minimum(raw, kk))
+
+    def extract_new(_):
+        neg = jnp.where(is_new, -k_slot, -jnp.int32(PAD_KEY))
+        vals, new_slots = jax.lax.top_k(neg, kk)
+        ns = jnp.where(jnp.arange(kk) < n_new, -vals, PAD_KEY)
+        new_h = (jnp.take(st.top, new_slots) - st.zl).astype(jnp.int32)
+        return ns, new_h, new_slots.astype(jnp.int32)
+
+    def no_new(_):
+        z = jnp.zeros((kk,), jnp.int32)
+        return jnp.full((kk,), PAD_KEY, jnp.int32), z, z
+
+    ns, new_h, new_slots = jax.lax.cond(n_new > 0, extract_new, no_new,
+                                        operand=None)
+
+    # ---- local merge into a bounded segment (never truncates: the
+    # global repack below owns the width-overflow accounting)
+    m_len = wl + kk
+    seg_k, seg_h, seg_s = _merge_rows(
+        bot_l, surv, old_h, slots_eff, ns, new_h, new_slots,
+        n_new, wl, kk, out_len=m_len)
+    c = jnp.sum(surv.astype(jnp.int32)) + n_new
+
+    # ---- redistribution: exclusive scan of segment counts composes the
+    # global packed bottom row; each output lane gathers from the shard
+    # segment that covers its global rank
+    counts = jax.lax.all_gather(c, axis)               # [S]
+    cum = jnp.cumsum(counts)
+    offs = cum - counts
+    total = cum[S - 1]
+    segs_k = jax.lax.all_gather(seg_k, axis)           # [S, m_len]
+    segs_h = jax.lax.all_gather(seg_h, axis)
+    segs_s = jax.lax.all_gather(seg_s, axis)
+
+    def pick(segs, pos, fill):
+        t = jnp.searchsorted(cum, pos, side="right").astype(jnp.int32)
+        tc = jnp.clip(t, 0, S - 1)
+        li = jnp.clip(pos - jnp.take(offs, tc), 0, m_len - 1)
+        v = jnp.take(segs.reshape(S * m_len), tc * m_len + li)
+        return jnp.where(pos < total, v, fill)
+
+    pos_g = jnp.arange(width, dtype=jnp.int32)
+    keys_g = pick(segs_k, pos_g, jnp.int32(PAD_KEY))   # [W] merged row
+    hts_g = pick(segs_h, pos_g, jnp.int32(0))
+    slots_own = pick(segs_s, col_g, jnp.int32(-1))     # own lanes only
+
+    # ---- re-layering: per-shard mask/prefix-sum on own columns, then
+    # an exclusive cross-shard scan of per-row totals lifts local ranks
+    # to global ones.  The composed global prefix sum is STREAMED one
+    # level row at a time (lax.scan with an all_gather per row): a shard
+    # holds O(W) transient buffers, never the [L, W] rectangle — that is
+    # what lets the plane outgrow one device's memory.
+    alive_g = keys_g != PAD_KEY
+    h_g = jnp.where(alive_g, hts_g, -1)
+    k_own = jax.lax.dynamic_slice(keys_g, (ax * wl,), (wl,))
+    hraw_own = jax.lax.dynamic_slice(hts_g, (ax * wl,), (wl,))
+    h_own = jnp.where(k_own != PAD_KEY, hraw_own, -1)
+
+    row_min_h = (n_levels - 1 - jnp.arange(n_levels, dtype=jnp.int32))
+    mask_own = h_own[None, :] >= row_min_h[:, None]    # [L, wl]
+    cs_own = jnp.cumsum(mask_own, axis=1, dtype=jnp.int32)
+    tot_own = cs_own[:, wl - 1]                        # [L]
+    tots = jax.lax.all_gather(tot_own, axis)           # [S, L]
+    row_offs = jnp.cumsum(tots, axis=0) - tots         # [S, L] exclusive
+    widths_g = jnp.sum(tots, axis=0)                   # [L] global
+
+    # ---- own output columns, one row per scan step: compaction gather
+    # + rank emission.  The member for a global output lane can live in
+    # any shard's columns, so each step gathers that row's composed
+    # prefix sum; the rank of row r's members reads row r+1's composed
+    # sum, i.e. the NEXT step's cs_row — carried via prev_take.
+    def level_step(prev_take, inp):
+        cs_own_r, offs_r = inp                         # [wl], [S]
+        blocks = jax.lax.all_gather(cs_own_r, axis)    # [S, wl]
+        cs_row = (blocks + offs_r[:, None]).reshape(width)
+        take_r = jnp.minimum(
+            jnp.searchsorted(cs_row, col_g + 1).astype(jnp.int32),
+            width - 1)
+        rank_up = jnp.take(cs_row, prev_take) - 1      # rank of row r-1
+        return take_r, (take_r, rank_up)
+
+    _, (takes, rank_ups) = jax.lax.scan(
+        level_step, jnp.zeros((wl,), jnp.int32),
+        (cs_own, jnp.transpose(row_offs)))
+    live = col_g[None, :] < widths_g[:, None]
+    rows_own = jnp.where(live, jnp.take(keys_g, takes), PAD_KEY)
+    # rows 0..L-2: live rank from the next row's composed sum, pad lanes
+    # close the window at the next row's live width; bottom row is the
+    # (global-column) identity
+    rank_own = jnp.where(live[:-1], rank_ups[1:], widths_g[1:, None])
+    rank_own = jnp.concatenate([rank_own, col_g[None, :]], axis=0)
+
+    heights_own = jnp.where(k_own != PAD_KEY, hraw_own, 0).astype(jnp.int32)
+
+    overflow = (jnp.maximum(total_raw - kk, 0)
+                + jnp.maximum(total - width, 0)).astype(jnp.int32)
+    plane = DeviceLevelArrays(keys=rows_own, widths=widths_g,
+                              heights=heights_own, rank_map=rank_own,
+                              slots=slots_own)
+    return plane, overflow
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_refresh_fn(mesh, axis: str, n_levels: int, width: int,
+                        max_new: int):
+    """Build (and cache) the jitted shard_map for one (mesh, axis,
+    shape, max_new) cell — planes are shape-stable, so serving reuses
+    one entry per mesh."""
+    from repro.parallel import sharding as shd
+    from jax.sharding import PartitionSpec as P
+    S = mesh.shape[axis]
+    specs = shd.index_plane_specs(DeviceLevelArrays, axis)
+    body = functools.partial(
+        _refresh_shard_body, axis=axis, n_shards=S, n_levels=n_levels,
+        width=width, max_new=max_new)
+    fn = shd.shard_map_compat(body, mesh=mesh,
+                              in_specs=(P(), specs),
+                              out_specs=(specs, P()))
+    return jax.jit(fn)
+
+
+def refresh_device_sharded(st: sx.SplayState, prev: DeviceLevelArrays,
+                           max_new: int = 1024, mesh=None,
+                           axis: str = "model"):
+    """Width-sharded incremental refresh: :func:`refresh_device` under
+    ``shard_map`` over the ``splay_width`` logical axis (DESIGN.md
+    §5.4), so a plane too large for one device's memory refreshes with
+    each shard owning W/S columns — a contiguous key range of the
+    sorted bottom row.  New keys route to their owning shard by a
+    sharded ``searchsorted`` against the range-boundary table (built
+    with a one-element ``ppermute`` halo of block-first keys); rank
+    offsets and level prefix sums compose globally from per-shard
+    prefix sums plus exclusive cross-shard scans of shard totals.
+
+    Sharding contract: the state is replicated (every shard classifies
+    its own key range against the full state); ``prev`` should be laid
+    out by ``sharding.shard_index_plane`` /
+    :func:`sharding.index_plane_specs` — keys/rank_map ``P(None,
+    axis)``, heights/slots ``P(axis)``, widths replicated.  The result
+    carries the same layout.
+
+    Returns ``(plane, overflow_count)``.  ``overflow_count`` (int32,
+    all-reduced across shards) counts alive keys the plane could not
+    represent — inserts beyond ``max_new`` plus merged lanes beyond
+    ``width`` (see :func:`refresh_device` for the rebuild protocol).
+
+    Fallback modes (never raises): no mesh — neither passed nor active
+    via ``sharding.use_mesh`` — or ``axis`` absent from the mesh, or
+    ``width`` not divisible by the axis size, all route to the
+    replicated :func:`refresh_device` with the same return convention.
+
+    Equivalence: on any 1×N host mesh the result is bit-identical to
+    the replicated refresh on ``keys``/``widths``/``heights``/
+    ``rank_map`` (asserted in ``tests/test_sharded_refresh.py``); the
+    ``slots`` companion agrees on live lanes (pad lanes are unspecified
+    in both paths and never read)."""
+    from repro.parallel import sharding as shd
+    mesh = mesh if mesh is not None else shd.active_mesh()
+    n_levels, width = prev.keys.shape
+    if (mesh is None or axis not in mesh.shape
+            or width % mesh.shape[axis]):
+        return refresh_device(st, prev, max_new=max_new,
+                              return_overflow=True)
+    fn = _sharded_refresh_fn(mesh, axis, n_levels, width, max_new)
+    return fn(st, prev)
 
 
 def to_host(plane: DeviceLevelArrays):
     """Materialize as a host ``LevelArrays`` (tests / debugging only —
-    the serving path never calls this)."""
+    the serving path never calls this).  Accepts replicated or
+    width-sharded planes alike: ``np.asarray`` gathers sharded arrays
+    into one host buffer."""
     import numpy as np
     from repro.core import level_arrays as la
     return la.LevelArrays(

@@ -668,47 +668,98 @@ def run_contains_batch(st: SplayState, keys, upd_mask,
 # (DESIGN.md §5.3)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("aggregate",))
+@functools.partial(jax.jit, static_argnames=("aggregate", "max_new"))
 def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
-              aggregate: bool = False):
+              aggregate: bool = False, max_new: int = None,
+              rebuild=False):
     """One serving epoch entirely on device: apply a batch of operations
     (contains/insert/delete via :func:`run_ops`; ``aggregate=True`` runs
     the flat-combined contains fold of :func:`run_contains_batch`
-    instead, ignoring ``kinds``), then incrementally refresh the
-    device-resident index plane (``device_index.refresh_device``).  The
-    level arrays never leave the accelerator — no ``to_numpy``, no host
-    argsort, stable shapes across epochs.  Returns
-    ``(state, plane, results[B], path_len[B])``."""
+    instead, ignoring ``kinds``), then refresh the device-resident index
+    plane.  The level arrays never leave the accelerator — no
+    ``to_numpy``, no host argsort, stable shapes across epochs.
+
+    ``max_new`` bounds the refresh's new-key extraction (default: the
+    batch size, which one epoch's inserts cannot exceed; engines that
+    refresh less often than they batch pass their own bound).
+    ``rebuild`` (traced bool) routes the plane through a full
+    ``from_state_device`` rebuild instead of the incremental refresh —
+    the overflow recovery path (DESIGN.md §5.4).
+
+    Returns ``(state, plane, results[B], path_len[B], overflow)`` where
+    ``overflow`` (int32 scalar) counts alive keys the refreshed plane
+    could not represent this epoch: inserts beyond ``max_new`` plus
+    alive keys beyond the plane width.  Nonzero overflow means the
+    plane is stale until the caller (or :func:`run_serving`'s carry)
+    triggers the rebuild; a rebuild at the same shape cannot fix
+    ``size > width`` — that persists in ``overflow`` as the host-visible
+    signal to re-plan with a wider plane."""
     from repro.core import device_index as dix
     if aggregate:
         st, res, plen = run_contains_batch(st, keys, upd_mask,
                                            aggregate=True)
     else:
         st, res, plen = run_ops(st, kinds, keys, upd_mask)
-    # an epoch cannot insert more keys than it has ops: bound the
-    # refresh's new-key extraction by the batch size
-    plane = dix.refresh_device(st, plane, max_new=keys.shape[0])
-    return st, plane, res, plen
+    n_levels, width = plane.keys.shape
+    if max_new is None:
+        # an epoch cannot insert more keys than it has ops: bound the
+        # refresh's new-key extraction by the batch size
+        max_new = keys.shape[0]
+
+    def full_rebuild(_):
+        pl = dix.from_state_device(st, n_levels=n_levels, width=width)
+        # a full build drops nothing the plane can hold; only alive
+        # counts beyond the (static) width remain unrepresentable
+        ovf = jnp.maximum(st.size - width, 0).astype(jnp.int32)
+        return pl, ovf
+
+    def incremental(_):
+        return dix.refresh_device(st, plane, max_new=max_new,
+                                  return_overflow=True)
+
+    plane, overflow = jax.lax.cond(rebuild, full_rebuild, incremental,
+                                   operand=None)
+    return st, plane, res, plen, overflow
 
 
-@functools.partial(jax.jit, static_argnames=("aggregate",))
+@functools.partial(jax.jit, static_argnames=("aggregate", "max_new"))
 def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
-                aggregate: bool = False):
+                aggregate: bool = False, max_new: int = None):
     """The jitted epoch *loop*: scan :func:`run_epoch` over ``[E, B]``
-    op batches, threading (state, plane) through the carry — E epochs of
-    search + update + index refresh with zero host round-trips of
-    index-plane data.  Returns ``(state, plane, results[E, B],
-    path_len[E, B])``."""
-    def step(carry, ep):
-        s, pl = carry
-        kd, ks, up = ep
-        s, pl, res, plen = run_epoch(s, pl, kd, ks, up,
-                                     aggregate=aggregate)
-        return (s, pl), (res, plen)
+    op batches, threading (state, plane, rebuild-pending) through the
+    carry — E epochs of search + update + index refresh with zero host
+    round-trips of index-plane data.
 
-    (st, plane), (res, plen) = jax.lax.scan(
-        step, (st, plane), (kinds, keys, upd_mask))
-    return st, plane, res, plen
+    Overflow state machine (DESIGN.md §5.4): an epoch whose refresh
+    reports nonzero overflow arms a pending flag, and the *next*
+    epoch's refresh is a full ``from_state_device`` rebuild, folding the
+    dropped inserts back in instead of silently losing them.  The alive
+    count *entering* the near-full zone (within one batch of the plane
+    width) arms it too — but edge-triggered, once per crossing, so
+    steady-state serving at high occupancy keeps the cheap incremental
+    refresh instead of paying a full rebuild every epoch.  Returns
+    ``(state, plane, results[E, B], path_len[E, B], overflow[E])``;
+    ``overflow[e] > 0`` flags the stale epochs (staleness lasts one
+    epoch; persistent nonzero overflow means the alive count exceeds
+    the plane width — rebuild wider at the host level)."""
+    width = plane.keys.shape[1]
+    B = keys.shape[1]
+
+    def step(carry, ep):
+        s, pl, pending, pressed = carry
+        kd, ks, up = ep
+        s, pl, res, plen, ovf = run_epoch(s, pl, kd, ks, up,
+                                          aggregate=aggregate,
+                                          max_new=max_new,
+                                          rebuild=pending)
+        pressure = s.size + B > width
+        pending = (ovf > 0) | (pressure & ~pressed)
+        return (s, pl, pending, pressure), (res, plen, ovf)
+
+    (st, plane, _, _), (res, plen, ovf) = jax.lax.scan(
+        step, (st, plane, jnp.asarray(False), jnp.asarray(False)),
+        (kinds, keys, upd_mask))
+    return st, plane, res, plen, ovf
 
 
 # ---------------------------------------------------------------------------

@@ -8,18 +8,21 @@ Two kernels live here:
 
 ``splay_search`` — the tiered pipeline (DESIGN.md §5.2).  Grid
 ``(query_blocks, n_levels)``; the level matrix and the rank map are tiled
-*per row* (``pl.BlockSpec((1, width), ...)``), so exactly one row is VMEM
-resident at a time and the footprint is O(W) instead of O(L·W).  The row
-index_map goes through a scalar-prefetched fetch schedule that aliases
-statically-empty rows (padding above the tallest key) to the next live
-row — consecutive identical block indices suppress the duplicate DMA.
-Within a row the full-width ``row <= q`` compare is replaced by
-rank-windowed descent: the predecessor index ``p`` found at level r bounds
-the level-r+1 predecessor inside ``[rank_map[r, p], rank_map[r, p + 1])``
-(rows are nested), and a masked binary refinement locates it in
-O(log window) probes instead of O(W) compares.  The ``[lo, hi)`` window
-is carried across grid steps in VMEM scratch; ``found``/``level_found``
-accumulate in revisited output blocks.
+*per row* (``pl.BlockSpec((1, width), ...)``), so one row of each operand
+(level row + rank-map row, plus the two [QB] window scratch vectors) is
+VMEM resident per grid step and the footprint is O(W) instead of
+O(L·W).  The row index_map goes through a scalar-prefetched fetch
+schedule that aliases statically-empty rows (padding above the tallest
+key) to the next live row — consecutive identical block indices suppress
+the duplicate DMA on the compiled (TPU) path; interpret mode computes
+the same schedule but models no DMA.  Within a row the full-width
+``row <= q`` compare is replaced by rank-windowed descent: the
+predecessor index ``p`` found at level r bounds the level-r+1
+predecessor inside ``[rank_map[r, p], rank_map[r, p + 1])`` (rows are
+nested), and a masked binary refinement locates it in O(log window)
+probes instead of O(W) compares.  The ``[lo, hi)`` window is carried
+across grid steps in VMEM scratch; ``found``/``level_found`` accumulate
+in revisited output blocks.
 
 ``splay_search_full`` — the seed kernel, kept as the measured baseline:
 it declares the whole ``[n_levels, width]`` matrix as one constant block
@@ -31,9 +34,18 @@ Both wrappers pad the query batch to the block multiple internally and
 slice the outputs back — callers never pre-pad.  They also accept an
 index plane struct (``core.device_index.DeviceLevelArrays`` or the host
 ``core.level_arrays.LevelArrays``) in place of the bare key matrix, in
-which case the precomputed rank map and row widths ride along and the
-``rank_windows`` jnp fallback below is the shared derivation path for
-bare-matrix callers only.
+which case the struct's precomputed rank map and row widths ride along
+(both the host build and the device build/refresh emit them); the
+``rank_windows`` jnp fallback below serves bare-matrix callers only.
+
+Sharding (DESIGN.md §5.4): a plane laid out width-sharded by
+``parallel.sharding.shard_index_plane`` is accepted directly — the
+wrapper gathers its arrays to a replicated layout before the kernel call
+(the Pallas kernel is a single-device program; the *refresh* is what
+runs sharded) and constrains the padded query batch to the ``"batch"``
+logical axis under the active mesh.  Executing the search itself
+width-sharded, with query blocks routed to the shard owning their rank
+window, is an open ROADMAP item.
 """
 
 from __future__ import annotations
@@ -45,15 +57,36 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.parallel import sharding as shd
+
 PAD_KEY = 2 ** 31 - 1
 DEFAULT_QUERY_BLOCK = 256
+
+
+def _is_concrete(x) -> bool:
+    return isinstance(x, jax.Array) and not isinstance(x, jax.core.Tracer)
+
+
+def _replicated(x):
+    """Gather a (concrete) width-sharded array to every device; identity
+    for replicated/single-device arrays and for tracers (inside a jit the
+    caller's own sharding context governs)."""
+    if not _is_concrete(x):
+        return x
+    sharding = getattr(x, "sharding", None)
+    mesh = getattr(sharding, "mesh", None)
+    if mesh is None or getattr(sharding, "is_fully_replicated", True):
+        return x
+    return jax.device_put(
+        x, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()))
 
 
 def rank_windows(level_keys):
     """rank_map[r, j] = index of level_keys[r, j] in row r+1 (identity on
     the bottom row; pad entries map to the next row's live width).  The
-    jnp fallback for callers that did not precompute it host-side in
-    ``LevelArrays.build``."""
+    jnp fallback for bare-matrix callers — both plane builders
+    (``level_arrays.build`` on host, ``device_index`` on device)
+    precompute it."""
     n_levels, width = level_keys.shape
     ident = jnp.arange(width, dtype=jnp.int32)[None, :]
     if n_levels == 1:
@@ -140,25 +173,39 @@ def _kernel_tiered(fetch_ref, widths_ref, q_ref, row_ref, rm_ref,
         hi_ref[...] = hi_n
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("query_block", "interpret"))
 def splay_search(level_keys, queries, query_block: int =
                  DEFAULT_QUERY_BLOCK, interpret: bool = True,
                  rank_map=None, widths=None):
     """Tiered batched search.  level_keys: int32 [n_levels, width]
     (sorted rows, +INF padded, nested) — or an index plane struct
     (``DeviceLevelArrays``/``LevelArrays``), whose rank_map/widths are
-    used directly.  queries int32 [q] (any length — padded to the block
-    multiple internally).  rank_map/widths: precomputed companions
-    (derived on the fly when a bare matrix is passed without them).
-    Returns (found [q] bool, rank [q] int32, level_found [q] int32)."""
+    used directly.  A width-sharded plane (``shard_index_plane`` layout)
+    is gathered to replicated before the single-device kernel runs; the
+    query batch is constrained to the ``"batch"`` logical axis when a
+    mesh is active (no-op otherwise).  queries int32 [q] (any length —
+    padded to the block multiple internally).  rank_map/widths:
+    precomputed companions (derived on the fly when a bare matrix is
+    passed without them).  Returns (found [q] bool, rank [q] int32,
+    level_found [q] int32)."""
     if hasattr(level_keys, "rank_map"):        # index plane struct
         plane = level_keys
-        level_keys = jnp.asarray(plane.keys)
+        level_keys = _replicated(jnp.asarray(plane.keys))
         if rank_map is None:
-            rank_map = jnp.asarray(plane.rank_map)
+            rank_map = _replicated(jnp.asarray(plane.rank_map))
         if widths is None:
-            widths = jnp.asarray(plane.widths)
+            widths = _replicated(jnp.asarray(plane.widths))
+    queries = shd.constrain(jnp.asarray(queries), "batch")
+    return _splay_search_arrays(level_keys, queries,
+                                query_block=query_block,
+                                interpret=interpret, rank_map=rank_map,
+                                widths=widths)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("query_block", "interpret"))
+def _splay_search_arrays(level_keys, queries, query_block: int =
+                         DEFAULT_QUERY_BLOCK, interpret: bool = True,
+                         rank_map=None, widths=None):
     n_levels, width = level_keys.shape
     nq = queries.shape[0]
     if nq == 0:
@@ -261,15 +308,25 @@ def _kernel_full(q_ref, lv_ref, found_ref, rank_ref, level_ref, *,
     level_ref[...] = level_found
 
 
-@functools.partial(jax.jit, static_argnames=("query_block", "interpret"))
 def splay_search_full(level_keys, queries, query_block: int =
                       DEFAULT_QUERY_BLOCK, interpret: bool = True):
     """Seed baseline: the full [n_levels, width] matrix is a single
     constant-index block (always resident; O(L·W) compare per query
     block).  Queries of any length — padded internally.  Accepts an
-    index plane struct in place of the bare matrix."""
+    index plane struct (width-sharded planes are gathered to replicated,
+    as in :func:`splay_search`) in place of the bare matrix."""
     if hasattr(level_keys, "rank_map"):        # index plane struct
-        level_keys = jnp.asarray(level_keys.keys)
+        level_keys = _replicated(jnp.asarray(level_keys.keys))
+    queries = shd.constrain(jnp.asarray(queries), "batch")
+    return _splay_search_full_arrays(level_keys, queries,
+                                     query_block=query_block,
+                                     interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("query_block", "interpret"))
+def _splay_search_full_arrays(level_keys, queries, query_block: int =
+                              DEFAULT_QUERY_BLOCK,
+                              interpret: bool = True):
     n_levels, width = level_keys.shape
     nq = queries.shape[0]
     if nq == 0:

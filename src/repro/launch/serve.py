@@ -1,6 +1,15 @@
 """Serving driver: continuous batching with the splay-adaptive engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch minitron-8b --smoke
+
+``--splay-demo`` instead drives the ordered-map serving substrate
+directly (DESIGN.md §5.3–§5.4): build a splay-list state and its
+device-resident index plane, run jitted serving epochs
+(``splaylist.run_serving`` — op batches + incremental plane refresh with
+the overflow/rebuild state machine), and, when the runtime exposes
+multiple devices (e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``),
+refresh the plane width-sharded over the model axis and verify it
+against the replicated refresh.
 """
 
 from __future__ import annotations
@@ -15,6 +24,74 @@ from repro.models import model_zoo as zoo
 from repro.serve.engine import Engine, Request
 
 
+def splay_demo(args) -> dict:
+    """The build plane -> run_serving -> read results loop, plus the
+    sharded-refresh cross-check (the launch-layer face of DESIGN.md
+    §5.4)."""
+    import jax.numpy as jnp
+    from repro.core import device_index as dix
+    from repro.core import splaylist as sx
+    from repro.parallel import sharding as shd
+
+    rng = np.random.default_rng(args.seed)
+    cap, L = 2050, 16
+    W = cap - 2                      # 2048: divides 2/4/8-way meshes
+    st = sx.make(capacity=cap, max_level=L)
+    pool = np.arange(0, 2000, 2, dtype=np.int32)
+    st, _, _ = sx.run_ops(
+        st, jnp.full((len(pool),), sx.OP_INSERT, jnp.int32),
+        jnp.asarray(pool), jnp.ones((len(pool),), bool))
+    plane = dix.from_state_device(st, n_levels=L, width=W)
+
+    E, B = args.epochs, args.batch
+    hot = rng.choice(pool, max(B // 16, 1))
+    kinds = rng.choice([sx.OP_CONTAINS, sx.OP_CONTAINS, sx.OP_INSERT],
+                       (E, B)).astype(np.int32)
+    keys = np.where(rng.random((E, B)) < 0.8,
+                    rng.choice(hot, (E, B)),
+                    rng.integers(0, 4000, (E, B))).astype(np.int32)
+    ups = rng.random((E, B)) < 0.5
+
+    st2, plane2, res, plen, ovf = sx.run_serving(
+        st, plane, jnp.asarray(kinds), jnp.asarray(keys),
+        jnp.asarray(ups))
+    out = {
+        "epochs": E, "batch": B,
+        "hit_rate": float(np.asarray(res).mean()),
+        "mean_path": float(np.asarray(plen).mean()),
+        "overflow_epochs": int((np.asarray(ovf) > 0).sum()),
+        "alive": int(st2.size),
+    }
+    print(f"splay serving: {E} epochs x {B} ops, hit rate "
+          f"{out['hit_rate']:.2f}, mean path {out['mean_path']:.1f}, "
+          f"overflow epochs {out['overflow_epochs']}, "
+          f"alive {out['alive']}/{W}")
+
+    n_dev = len(jax.devices())
+    if n_dev > 1 and W % n_dev == 0:
+        mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+        plane_s = shd.shard_index_plane(plane, mesh)
+        # replay one op batch, then refresh sharded vs replicated
+        st3, _, _ = sx.run_ops(
+            st, jnp.asarray(kinds[0]), jnp.asarray(keys[0]),
+            jnp.asarray(ups[0]))
+        ps, ov_s = dix.refresh_device_sharded(st3, plane_s, max_new=B,
+                                              mesh=mesh)
+        pr, ov_r = dix.refresh_device(st3, plane, max_new=B,
+                                      return_overflow=True)
+        match = all(
+            (np.asarray(getattr(ps, f)) == np.asarray(getattr(pr, f))).all()
+            for f in ("keys", "widths", "heights", "rank_map"))
+        out["sharded"] = {"shards": n_dev, "bit_identical": bool(match),
+                          "overflow": int(ov_s)}
+        print(f"sharded refresh on {n_dev} shards: bit_identical={match}, "
+              f"overflow={int(ov_s)} (replicated {int(ov_r)})")
+    else:
+        print(f"sharded refresh skipped ({n_dev} device(s); set "
+              f"XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minitron-8b")
@@ -23,7 +100,15 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--splay-demo", action="store_true",
+                    help="drive the splay index-plane serving loop "
+                         "instead of the LM engine")
+    ap.add_argument("--epochs", type=int, default=6)
+    ap.add_argument("--batch", type=int, default=128)
     args = ap.parse_args(argv)
+
+    if args.splay_demo:
+        return splay_demo(args)
 
     cfg = (registry.get_smoke(args.arch) if args.smoke
            else registry.get(args.arch))

@@ -20,19 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-# newer jax exposes jax.shard_map; the replication-check kwarg was renamed
-# check_rep -> check_vma along the way, so key the choice off the actual
-# signature rather than the attribute (0.5.x has jax.shard_map+check_rep)
-import inspect
-
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-else:  # pragma: no cover - exercised on jax 0.4.x only
-    from jax.experimental.shard_map import shard_map as _shard_map
-_SHARD_MAP_KW = (
-    {"check_vma": False}
-    if "check_vma" in inspect.signature(_shard_map).parameters
-    else {"check_rep": False})
+from repro.parallel.sharding import shard_map_compat
 
 
 def pipeline_forward(x, stage_params, stage_fn: Callable, mesh,
@@ -89,10 +77,9 @@ def pipeline_forward(x, stage_params, stage_fn: Callable, mesh,
 
     spec_x = P()          # batch replicated across the pipe axis
     spec_p = P(axis)
-    fn = _shard_map(
+    fn = shard_map_compat(
         stage_worker, mesh=mesh,
-        in_specs=(spec_p, spec_x), out_specs=spec_x,
-        **_SHARD_MAP_KW)
+        in_specs=(spec_p, spec_x), out_specs=spec_x)
     return fn(stage_params, x)
 
 

@@ -8,11 +8,22 @@ replication (e.g. qwen2's 14 heads on a 16-way model axis -> heads
 replicated, and the contraction-dim rule kicks in instead — row-parallel
 TP).  This keeps every (arch x mesh) cell compilable without per-arch
 special cases.
+
+Splay index plane (DESIGN.md §5.3–§5.4): the ``[L, W]`` rectangle carries
+the logical axes ``("splay_level", "splay_width")`` — levels replicated,
+width sharded over ``model`` when ``W`` divides the axis.  Three helpers
+cover its lifecycle: :func:`constrain_index_plane` (sharding constraints
+inside jit), :func:`index_plane_specs` (the ``PartitionSpec`` pytree the
+sharded refresh's ``shard_map`` uses), and :func:`shard_index_plane`
+(``device_put`` a host-built plane into the width-sharded layout).
+:func:`shard_map_compat` papers over the ``check_rep``/``check_vma``
+rename so every shard_map in the repo goes through one shim.
 """
 
 from __future__ import annotations
 
 import contextlib
+import inspect
 import threading
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -20,6 +31,27 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+# newer jax exposes jax.shard_map; the replication-check kwarg was renamed
+# check_rep -> check_vma along the way, so key the choice off the actual
+# signature rather than the attribute (0.5.x has jax.shard_map+check_rep)
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - exercised on jax 0.4.x only
+    from jax.experimental.shard_map import shard_map as _shard_map
+_SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else {"check_rep": False})
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions (replication checking disabled:
+    the bodies in this repo return deliberately-replicated outputs — e.g.
+    all-reduced scalars, all-gathered widths — that the static checker
+    cannot prove)."""
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **_SHARD_MAP_KW)
 
 # -- default rule tables -----------------------------------------------------
 
@@ -71,7 +103,9 @@ _CTX = _Ctx()
 @contextlib.contextmanager
 def use_mesh(mesh: Optional[Mesh], rules: Optional[Rules] = None):
     """Activate (mesh, rules) for logical-axis resolution.  With mesh=None
-    all constraints become no-ops (single-host smoke tests)."""
+    all constraints become no-ops (single-host smoke tests).  Thread-local
+    and reentrant; the previous (mesh, rules) pair is restored on exit
+    even when the body raises."""
     old = (_CTX.mesh, _CTX.rules)
     _CTX.mesh, _CTX.rules = mesh, (rules or {})
     try:
@@ -99,7 +133,10 @@ def resolve_spec(shape: Sequence[int], names: Sequence[Optional[str]],
                  mesh: Optional[Mesh] = None,
                  rules: Optional[Rules] = None) -> P:
     """Logical names -> PartitionSpec with divisibility fallback.  A mesh
-    axis is never used twice in one spec (first dim wins)."""
+    axis is never used twice in one spec (first dim wins).  Never raises:
+    unknown names, rule axes absent from the mesh, and indivisible
+    dimensions all resolve to replication for that dimension — the
+    constraint degrades, the program still compiles."""
     mesh = mesh or _CTX.mesh
     rules = rules if rules is not None else _CTX.rules
     if mesh is None:
@@ -124,7 +161,8 @@ def resolve_spec(shape: Sequence[int], names: Sequence[Optional[str]],
 
 def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
     """with_sharding_constraint under the active (mesh, rules); no-op when
-    no mesh is active."""
+    no mesh is active.  One logical name per dimension of ``x`` (trailing
+    names may be omitted — unnamed dims replicate)."""
     mesh = _CTX.mesh
     if mesh is None:
         return x
@@ -146,13 +184,50 @@ def constrain_index_plane(plane):
     map follow ("splay_level", "splay_width") — width-sharded when W
     divides the model axis, replicated otherwise — and the 1-D
     widths/heights companions follow their own axis.  No-op without an
-    active mesh, so serving loops can call it unconditionally."""
+    active mesh, so serving loops can call it unconditionally.
+
+    Failure modes: none raised here — an indivisible width silently
+    falls back to replication (by design, so every plane size stays
+    compilable on every mesh).  Callers that *require* the sharded
+    layout (``device_index.refresh_device_sharded``) check divisibility
+    themselves and fall back to the replicated refresh."""
     return type(plane)(
         keys=constrain(plane.keys, "splay_level", "splay_width"),
         widths=constrain(plane.widths, "splay_level"),
         heights=constrain(plane.heights, "splay_width"),
         rank_map=constrain(plane.rank_map, "splay_level", "splay_width"),
         slots=constrain(plane.slots, "splay_width"))
+
+
+def index_plane_specs(plane_cls, axis: str = "model"):
+    """The ``PartitionSpec`` pytree of a width-sharded index plane, in
+    the shape of ``plane_cls`` (``device_index.DeviceLevelArrays``):
+    ``keys``/``rank_map`` split their width (last) dimension over
+    ``axis``; ``heights``/``slots`` split their only dimension; the
+    per-level ``widths`` vector is replicated (every shard needs every
+    row's global live count).  This is the in/out contract of
+    ``device_index.refresh_device_sharded``'s ``shard_map``."""
+    return plane_cls(
+        keys=P(None, axis), widths=P(), heights=P(axis),
+        rank_map=P(None, axis), slots=P(axis))
+
+
+def shard_index_plane(plane, mesh: Optional[Mesh] = None,
+                      axis: str = "model"):
+    """``device_put`` a plane into the width-sharded layout on ``mesh``
+    (the active mesh when omitted).  Returns the plane unchanged when no
+    mesh is available or the width does not divide ``mesh.shape[axis]``
+    (the universal replication fallback).  The arrays stay *global* —
+    consumers index them exactly as before; only the placement changes."""
+    mesh = mesh if mesh is not None else _CTX.mesh
+    if mesh is None or axis not in mesh.shape:
+        return plane
+    if plane.keys.shape[1] % mesh.shape[axis]:
+        return plane
+    specs = index_plane_specs(type(plane), axis)
+    return type(plane)(*(
+        jax.device_put(x, NamedSharding(mesh, s))
+        for x, s in zip(plane, specs)))
 
 
 def gather_param(w: jax.Array, *storage_names: Optional[str]) -> jax.Array:

@@ -47,13 +47,7 @@ def test_build_device_matches_host(n, hmax, min_levels):
     _assert_plane_equal(dev, host)
 
 
-def _seed_state(pool, cap=256, ml=12):
-    st = sx.make(capacity=cap, max_level=ml)
-    st, _, _ = sx.run_ops(
-        st, jnp.full((len(pool),), sx.OP_INSERT, jnp.int32),
-        jnp.asarray(np.asarray(pool, np.int32)),
-        jnp.ones((len(pool),), bool))
-    return st
+from conftest import seed_splay_state as _seed_state  # noqa: E402
 
 
 def test_refresh_device_differential_mixed_epochs():
@@ -170,14 +164,15 @@ def test_run_epoch_and_serving_loop_on_device():
     prims = {e.primitive.name for e in jaxpr.jaxpr.eqns}
     assert not prims & {"pure_callback", "io_callback", "callback"}
 
-    st2, plane2, res, plen = sx.run_serving(
+    st2, plane2, res, plen, ovf = sx.run_serving(
         st, plane, jnp.asarray(kinds), jnp.asarray(keys),
         jnp.asarray(ups))
     assert res.shape == plen.shape == (E, B)
+    assert ovf.shape == (E,) and not np.asarray(ovf).any()
     _assert_plane_equal(plane2, la.from_state(st2, min_levels=L, width=W))
 
     # aggregate (flat-combined contains) epoch variant
-    st3, plane3, res3, _ = sx.run_epoch(
+    st3, plane3, res3, _, _ = sx.run_epoch(
         st, plane, jnp.asarray(kinds[0]), jnp.asarray(keys[0]),
         jnp.asarray(ups[0]), aggregate=True)
     _assert_plane_equal(plane3, la.from_state(st3, min_levels=L, width=W))
@@ -201,6 +196,67 @@ def test_kernels_consume_device_plane():
     out_full = ops.splay_search_full(plane, qs)
     for a, b in zip((f, r, lv), out_full):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_refresh_overflow_counted_not_silent():
+    """Regression for the silent-drop bug: an insert burst past
+    ``max_new`` used to vanish from the plane with no signal.  Now the
+    refresh reports exactly how many alive keys it could not represent,
+    and a full rebuild restores them."""
+    st = _seed_state(list(range(0, 100, 2)), cap=512)
+    W, L = 254, 12
+    plane = dix.from_state_device(st, n_levels=L, width=W)
+    burst = np.arange(1, 81, 2, dtype=np.int32)          # 40 inserts
+    st, _, _ = sx.run_ops(
+        st, jnp.full((len(burst),), sx.OP_INSERT, jnp.int32),
+        jnp.asarray(burst), jnp.ones((len(burst),), bool))
+    plane, ovf = dix.refresh_device(st, plane, max_new=16,
+                                    return_overflow=True)
+    assert int(ovf) == len(burst) - 16
+    # the plane is stale (missing exactly the dropped keys), not corrupt
+    w_bot = int(plane.widths[-1])
+    assert w_bot == int(st.size) - int(ovf)
+    # the kept inserts are the smallest of the burst (documented policy)
+    kept = set(np.asarray(plane.keys)[-1][:w_bot].tolist())
+    assert set(burst[:16].tolist()) <= kept
+    assert not (set(burst[16:].tolist()) & kept)
+    # recovery: the full rebuild is bit-identical to a fresh build
+    plane = dix.from_state_device(st, n_levels=L, width=W)
+    _assert_plane_equal(plane, la.from_state(st, min_levels=L, width=W))
+    # and a follow-up incremental refresh reports clean
+    plane, ovf = dix.refresh_device(st, plane, max_new=16,
+                                    return_overflow=True)
+    assert int(ovf) == 0
+    _assert_plane_equal(plane, la.from_state(st, min_levels=L, width=W))
+
+
+def test_run_serving_overflow_triggers_rebuild_next_epoch():
+    """The overflow/rebuild state machine (DESIGN.md §5.4): epoch 0's
+    insert burst exceeds ``max_new`` (overflow reported, keys missing
+    from the plane), epoch 1 runs the automatic ``from_state_device``
+    rebuild — the final plane is bit-identical to a fresh build, no
+    dropped keys."""
+    st = _seed_state(list(range(0, 100, 2)), cap=512)
+    W, L = 254, 12
+    plane = dix.from_state_device(st, n_levels=L, width=W)
+    E, B = 3, 48
+    kinds = np.full((E, B), sx.OP_CONTAINS, np.int32)
+    keys = np.zeros((E, B), np.int32)
+    kinds[0, :] = sx.OP_INSERT
+    keys[0, :] = np.arange(1, 2 * B, 2)                  # 48 fresh inserts
+    keys[1:, :] = np.resize(np.arange(0, 100, 2), (E - 1, B))
+    ups = np.ones((E, B), bool)
+    st2, plane2, _, _, ovf = sx.run_serving(
+        st, plane, jnp.asarray(kinds), jnp.asarray(keys),
+        jnp.asarray(ups), max_new=16)
+    ovf = np.asarray(ovf)
+    assert ovf[0] == B - 16                              # burst flagged
+    assert (ovf[1:] == 0).all()                          # rebuilt clean
+    _assert_plane_equal(plane2, la.from_state(st2, min_levels=L, width=W))
+    # no dropped keys: every inserted key is present in the final plane
+    w_bot = int(plane2.widths[-1])
+    final = set(np.asarray(plane2.keys)[-1][:w_bot].tolist())
+    assert set(keys[0].tolist()) <= final
 
 
 def test_from_state_device_pads_small_states():
