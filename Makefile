@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src:.
 
-.PHONY: test bench-smoke bench check-docs
+.PHONY: test bench-smoke bench bench-sharded-search check-docs
 
 # tier-1: the full pytest suite (ROADMAP "Tier-1 verify")
 test:
@@ -17,6 +17,14 @@ bench-smoke:
 # full benchmark harness (paper-scale sizes)
 bench:
 	$(PY) benchmarks/run.py --full
+
+# sharded-search bench on a forced 1x4 host mesh, written to its own
+# JSON (the parity battery runs once, via tests/test_sharded_search.py's
+# subprocess).  The CI parity step and the nightly bench job both invoke
+# exactly this target, so local and CI runs can't drift.
+bench-sharded-search:
+	$(PY) benchmarks/sharded_search_probe.py --bench --width 4096 \
+	  --nq 4096 | tee BENCH_search_sharded.json
 
 # docs gate: docs/API.md names resolve against the modules; the README
 # quickstart blocks execute (scripts/check_api_docs.py, CI `docs` job)

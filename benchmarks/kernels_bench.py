@@ -11,7 +11,10 @@ download + numpy argsort + plane re-upload) vs the device-resident
 ``device_index.refresh_device`` (searchsorted merge, zero host bytes) on
 membership-changing and height-only epochs, plus the width-sharded
 refresh (``refresh_device_sharded``) against the replicated one on a
-forced 1x4 host mesh (subprocess probe, DESIGN.md §5.4).
+forced 1x4 host mesh (subprocess probe, DESIGN.md §5.4) and the
+width-sharded search (``splay_search_sharded``) against the replicated
+tiered search and the gather-to-replicated dispatch on the same mesh
+(subprocess probe, DESIGN.md §5.5).
 
 Emits the usual CSV lines AND returns a machine-readable payload which
 ``benchmarks/run.py`` writes to ``BENCH_kernels.json`` (op/s, per-level
@@ -254,6 +257,30 @@ def _refresh_case(width: int, churn: int, epochs: int, reps: int,
     }
 
 
+def _sharded_search_case(width: int, nq: int) -> dict:
+    """Sharded-vs-replicated search race on a forced host mesh
+    (DESIGN.md §5.5).  Same subprocess pattern as the refresh race
+    (``benchmarks/sharded_search_probe.py --bench`` asserts bit-identity
+    across the dispatch seam and prints one JSON object).  Host-mesh
+    wall clock measures collective/dispatch overhead; the structural
+    columns (per-shard resident bytes, O(nq) psum wire, routing
+    balance) are what transfers."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)            # probe forces its own count
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "benchmarks/sharded_search_probe.py",
+         "--bench", "--width", str(width), "--nq", str(nq)],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=1200)
+    assert r.returncode == 0, f"probe failed:\n{r.stdout}\n{r.stderr}"
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    emit(f"search_sharded_w{width}", out["us_per_query_sharded"],
+         f"replicated_us={out['us_per_query_replicated']:.3f};"
+         f"shards={out['shards']};bit_identical={out['bit_identical']};"
+         f"routing_max_share={out['routing_max_share']:.2f}")
+    return out
+
+
 def _sharded_refresh_case(width: int) -> dict:
     """Sharded-vs-replicated refresh race on a forced host mesh
     (DESIGN.md §5.4).  The mesh needs
@@ -340,6 +367,9 @@ def run(quick: bool = False) -> dict:
     # sharded-vs-replicated refresh race (DESIGN.md §5.4), 1x4 host mesh
     payload["refresh_sharded"] = _sharded_refresh_case(
         1024 if quick else 4096)
+    # sharded-vs-replicated search race (DESIGN.md §5.5), 1x4 host mesh
+    payload["search_sharded"] = _sharded_search_case(
+        1024 if quick else 4096, nq)
 
     # hot_gather: bytes-touched model (hot hits avoid HBM entirely); the
     # hot set comes from observed counts, as the splay heights do

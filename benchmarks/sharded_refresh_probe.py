@@ -167,7 +167,8 @@ def run_parity() -> None:
     print("parity transient-empty OK")
 
     # the search wrapper accepts the width-sharded plane directly
-    # (gathers it to replicated for the single-device kernel)
+    # (auto-dispatching to the sharded search, DESIGN.md §5.5; the
+    # dedicated battery lives in sharded_search_probe.py)
     from repro.kernels import ops, ref
     qs = jnp.asarray(np.asarray(
         list(range(0, 60, 2)) + [999, 5, 7, 11], np.int32))

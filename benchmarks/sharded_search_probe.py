@@ -1,0 +1,310 @@
+"""Sharded-search probe: parity + race, in a forced host-device mesh.
+
+Self-contained subprocess target (it forces
+``--xla_force_host_platform_device_count`` *before* importing jax, which
+cannot be done from an already-initialized parent process), mirroring
+``sharded_refresh_probe.py``:
+
+  python benchmarks/sharded_search_probe.py --parity   # differential
+  python benchmarks/sharded_search_probe.py --bench    # JSON to stdout
+
+``--parity`` drives the width-sharded search
+(``kernels.splay_search.splay_search_sharded``, DESIGN.md §5.5) on
+1/2/4-way meshes and asserts bit-identity with the replicated tiered
+search on every (found, rank, level_found) triple, across: the full
+wrapper-dispatch seam (sharded plane + sharded search vs sharded plane
++ gather-to-replicated vs fully replicated plane), queries whose rank
+window straddles a shard boundary, boundary keys themselves, misses in
+cross-boundary gaps, transient-empty rows, the all-empty plane,
+membership-churn epoch streams interleaving sharded refresh + sharded
+search, and the end-to-end sharded serving loop
+(``splaylist.run_serving(plane_search=True, mesh=...)``).  Exits
+nonzero on any mismatch.
+
+``--bench`` races the sharded search on a 1x4 host mesh against the
+replicated tiered search and the gather-to-replicated dispatch over
+Zipf query batches and prints one JSON object (consumed by
+``benchmarks/kernels_bench.py`` into the ``search_sharded`` entry of
+``BENCH_kernels.json``).  Host-mesh timings measure collective and
+dispatch overhead, not accelerator scaling — the structural columns
+(per-shard resident bytes, wire per batch, routing balance) are the
+part that transfers to TPU.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+N_DEV = 4
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{_flags} --xla_force_host_platform_device_count={N_DEV}").strip()
+
+import jax                                             # noqa: E402
+import jax.numpy as jnp                                # noqa: E402
+import numpy as np                                     # noqa: E402
+
+from repro.core import device_index as dix             # noqa: E402
+from repro.core import splaylist as sx                 # noqa: E402
+from repro.kernels import splay_search as ssk          # noqa: E402
+from repro.parallel import sharding as shd             # noqa: E402
+
+CMP_FIELDS = ("keys", "widths", "heights", "rank_map")
+
+
+def _seed_state(pool, cap=512, ml=12):
+    st = sx.make(capacity=cap, max_level=ml)
+    st, _, _ = sx.run_ops(
+        st, jnp.full((len(pool),), sx.OP_INSERT, jnp.int32),
+        jnp.asarray(np.asarray(pool, np.int32)),
+        jnp.ones((len(pool),), bool))
+    return st
+
+
+def _assert_triple(a, b, msg):
+    for name, x, y in zip(("found", "rank", "level_found"), a, b):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y), err_msg=f"{msg} field={name}")
+
+
+def _boundary_queries(plane, mesh, extra=()):
+    """Queries concentrated on shard boundaries: every block-first
+    bottom-row key, its neighbours at ±1 (present keys and
+    cross-boundary-gap misses), below-min/above-max, plus ``extra``."""
+    bot = np.asarray(plane.keys)[-1]
+    W = bot.shape[0]
+    S = mesh.shape["model"]
+    wl = W // S
+    qs = []
+    i32 = 2 ** 31 - 1
+    for s in range(S):
+        first = int(bot[s * wl])
+        qs += [first, max(first - 1, -i32), min(first + 1, i32)]
+    live = bot[bot != ssk.PAD_KEY]
+    if live.size:
+        qs += [int(live[0]) - 7, int(live[-1]) + 7]
+    # the int32 extremes: INT32_MIN sits below even the -inf routing
+    # sentinel, PAD_KEY is the pad sentinel itself — both must still
+    # route to exactly one owner and match the replicated kernel
+    qs += [-2 ** 31, -i32, i32 - 1, i32]
+    qs += list(extra)
+    return jnp.asarray(np.asarray(qs, np.int32))
+
+
+def _search_three_ways(plane_r, plane_s, qs, mesh):
+    """The wrapper-dispatch seam: sharded plane + sharded search,
+    sharded plane + forced gather-to-replicated, fully replicated
+    plane — all three must be bit-identical."""
+    out_sh = ssk.splay_search_sharded(plane_s, qs, mesh=mesh)
+    out_ga = ssk.splay_search(plane_s, qs, sharded=False)
+    out_re = ssk.splay_search(plane_r, qs, sharded=False)
+    _assert_triple(out_sh, out_re, "sharded-vs-replicated")
+    _assert_triple(out_ga, out_re, "gather-vs-replicated")
+    return out_re
+
+
+def run_parity() -> None:
+    W, L = 252, 12
+    rng0 = np.random.default_rng(0)
+
+    for S in (1, 2, 4):
+        mesh = jax.make_mesh((1, S), ("data", "model"))
+        # skewed heights: the tall (hot) keys cluster at the low end of
+        # the keyspace, so upper rows live almost entirely in shard 0's
+        # key range — queries owned by later shards then carry rank
+        # windows that straddle shard boundaries on the global plane
+        pool = list(range(0, 320, 2))
+        st = _seed_state(pool)
+        pr = dix.from_state_device(st, n_levels=L, width=W)
+        ps = shd.shard_index_plane(pr, mesh)
+        qs = _boundary_queries(
+            pr, mesh, extra=list(rng0.integers(-10, 340, 64)))
+        _search_three_ways(pr, ps, qs, mesh)
+
+        # membership-churn epochs: sharded refresh feeding sharded
+        # search, vs the replicated chain
+        rng = np.random.default_rng(S)
+        for epoch in range(6):
+            kinds = rng.choice(
+                [sx.OP_CONTAINS, sx.OP_INSERT, sx.OP_DELETE], 48,
+                p=[.5, .3, .2]).astype(np.int32)
+            ks = rng.integers(0, 340, 48).astype(np.int32)
+            st, _, _ = sx.run_ops(st, jnp.asarray(kinds), jnp.asarray(ks),
+                                  jnp.ones((48,), bool))
+            pr, ovr = dix.refresh_device(st, pr, max_new=48,
+                                         return_overflow=True)
+            ps, ovs = dix.refresh_device_sharded(st, ps, max_new=48,
+                                                 mesh=mesh)
+            assert int(ovr) == int(ovs) == 0, (int(ovr), int(ovs))
+            qs = _boundary_queries(
+                pr, mesh, extra=list(rng.integers(-10, 360, 64)))
+            _search_three_ways(pr, ps, qs, mesh)
+        print(f"parity S={S}: dispatch seam + boundary windows + "
+              f"6 churn epochs OK")
+
+    mesh = jax.make_mesh((1, 4), ("data", "model"))
+
+    # transient-empty rows: few live keys -> upper rows empty; then the
+    # all-empty plane (delete everything), then refill out of it
+    st = _seed_state(list(range(0, 40, 2)), cap=128)
+    pr = dix.from_state_device(st, n_levels=L, width=124)
+    ps = shd.shard_index_plane(pr, mesh)
+    qs = _boundary_queries(pr, mesh, extra=[0, 1, 38, 39, 40, 1000])
+    _search_three_ways(pr, ps, qs, mesh)
+    dels = np.asarray(list(range(0, 40, 2)), np.int32)
+    st, _, _ = sx.run_ops(
+        st, jnp.full((len(dels),), sx.OP_DELETE, jnp.int32),
+        jnp.asarray(dels), jnp.ones((len(dels),), bool))
+    pr, _ = dix.refresh_device(st, pr, max_new=64, return_overflow=True)
+    ps, _ = dix.refresh_device_sharded(st, ps, max_new=64, mesh=mesh)
+    _search_three_ways(pr, ps, qs, mesh)          # all-empty plane
+    st, _, _ = sx.run_ops(
+        st, jnp.full((3,), sx.OP_INSERT, jnp.int32),
+        jnp.asarray(np.asarray([5, 7, 11], np.int32)),
+        jnp.ones((3,), bool))
+    pr, _ = dix.refresh_device(st, pr, max_new=64, return_overflow=True)
+    ps, _ = dix.refresh_device_sharded(st, ps, max_new=64, mesh=mesh)
+    _search_three_ways(pr, ps, qs, mesh)          # refill
+    print("parity transient-empty / all-empty / refill OK")
+
+    # indivisible width: documented gather-to-replicated fallback
+    st = _seed_state([2, 4, 6], cap=64)
+    p0 = dix.from_state_device(st, n_levels=6, width=62)
+    qs = jnp.asarray(np.asarray([1, 2, 3, 6, 9], np.int32))
+    out_f = ssk.splay_search_sharded(p0, qs, mesh=mesh)
+    out_r = ssk.splay_search(p0, qs, sharded=False)
+    _assert_triple(out_f, out_r, "indivisible-width fallback")
+    print("parity indivisible-width fallback OK")
+
+    # end-to-end sharded serving: contains-only epochs answered from
+    # the sharded plane search, refreshed by the sharded refresh
+    pool = list(range(0, 300, 2))
+    st = _seed_state(pool)
+    pr = dix.from_state_device(st, n_levels=L, width=W)
+    ps = shd.shard_index_plane(pr, mesh)
+    rng = np.random.default_rng(9)
+    E, B = 5, 64
+    kinds = np.zeros((E, B), np.int32)
+    keys = rng.choice(np.arange(0, 320), (E, B)).astype(np.int32)
+    ups = rng.random((E, B)) < 0.6
+    out_r = sx.run_serving(st, pr, jnp.asarray(kinds), jnp.asarray(keys),
+                           jnp.asarray(ups), aggregate=True,
+                           plane_search=True)
+    out_s = sx.run_serving(st, ps, jnp.asarray(kinds), jnp.asarray(keys),
+                           jnp.asarray(ups), aggregate=True,
+                           plane_search=True, mesh=mesh)
+    for i, name in ((2, "results"), (3, "path_len"), (4, "overflow")):
+        np.testing.assert_array_equal(
+            np.asarray(out_s[i]), np.asarray(out_r[i]),
+            err_msg=f"serving field={name}")
+    for f in CMP_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(out_s[1], f)),
+            np.asarray(getattr(out_r[1], f)),
+            err_msg=f"serving plane field={f}")
+    # the plane answers equal the state-walk answers in steady state
+    out_w = sx.run_serving(st, pr, jnp.asarray(kinds), jnp.asarray(keys),
+                           jnp.asarray(ups), aggregate=True)
+    np.testing.assert_array_equal(np.asarray(out_s[2]),
+                                  np.asarray(out_w[2]),
+                                  err_msg="plane answers vs state walk")
+    print("parity end-to-end sharded serving OK")
+    print("PARITY OK")
+
+
+def _time_min(fn, reps: int) -> float:
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_bench(width: int = 4096, nq: int = 4096, reps: int = 4) -> dict:
+    """Zipf query batches against a plane at 90% occupancy, sharded
+    (1x4 host mesh) vs replicated tiered vs gather-to-replicated
+    dispatch; asserts bit-identity on every output triple."""
+    from repro.core import workload as wl
+    mesh = jax.make_mesh((1, N_DEV), ("data", "model"))
+    n_levels = 8
+    keys, heights, qs = wl.zipf_level_fixture(width, 1.0, nq, seed=3)
+    plane = dix.build_device(jnp.asarray(keys), jnp.asarray(heights),
+                             n_levels=n_levels)
+    plane_s = shd.shard_index_plane(plane, mesh)
+    qsj = jnp.asarray(qs)
+    qb = 256
+
+    def shard_run():
+        return ssk.splay_search_sharded(plane_s, qsj, query_block=qb,
+                                        mesh=mesh)
+
+    def repl_run():
+        return ssk.splay_search(plane, qsj, query_block=qb,
+                                sharded=False)
+
+    def gather_run():
+        return ssk.splay_search(plane_s, qsj, query_block=qb,
+                                sharded=False)
+
+    t_shard = _time_min(lambda: shard_run()[0].block_until_ready(), reps)
+    t_repl = _time_min(lambda: repl_run()[0].block_until_ready(), reps)
+    t_gather = _time_min(lambda: gather_run()[0].block_until_ready(),
+                         reps)
+    _assert_triple(shard_run(), repl_run(), "bench sharded-vs-replicated")
+    _assert_triple(gather_run(), repl_run(), "bench gather-vs-replicated")
+
+    # routing balance: share of the batch owned by each shard (host-side
+    # mirror of the in-body searchsorted routing)
+    bot = np.asarray(plane.keys)[-1]
+    wl_ = width // N_DEV
+    bounds = np.asarray([bot[s * wl_] for s in range(N_DEV)], np.int64)
+    bounds[0] = -(2 ** 31) + 1
+    owner = np.searchsorted(bounds, np.asarray(qs), side="right") - 1
+    hist = np.bincount(owner, minlength=N_DEV)
+    itemsize = 4
+    return {
+        "mode": "zipf_search", "width": width, "n_levels": n_levels,
+        "shards": N_DEV, "lanes_per_shard": wl_, "nq": nq,
+        "query_block": qb,
+        "us_per_query_sharded": t_shard / nq * 1e6,
+        "us_per_query_replicated": t_repl / nq * 1e6,
+        "us_per_query_gather_dispatch": t_gather / nq * 1e6,
+        "ratio_sharded_over_replicated": t_shard / t_repl,
+        # what each shard holds/wires vs the replicated whole: resident
+        # plane state shrinks [L, W] -> [L, W/S]; the search's wire is
+        # one scalar all_gather + one [3, nq] psum per batch (O(nq),
+        # W-independent — the refresh's collectives are the O(W) part)
+        "replicated_resident_bytes": n_levels * width * itemsize,
+        "sharded_resident_bytes_per_shard":
+            n_levels * wl_ * itemsize,
+        "psum_bytes_per_batch": 3 * nq * itemsize,
+        "routing_per_shard": [int(x) for x in hist],
+        "routing_max_share": float(hist.max() / nq),
+        "bit_identical": True,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parity", action="store_true")
+    ap.add_argument("--bench", action="store_true")
+    ap.add_argument("--width", type=int, default=4096)
+    ap.add_argument("--nq", type=int, default=4096)
+    args = ap.parse_args(argv)
+    if args.parity:
+        run_parity()
+    if args.bench:
+        print(json.dumps(run_bench(width=args.width, nq=args.nq)))
+    if not (args.parity or args.bench):
+        ap.error("pass --parity and/or --bench")
+
+
+if __name__ == "__main__":
+    main()

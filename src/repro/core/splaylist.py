@@ -668,10 +668,13 @@ def run_contains_batch(st: SplayState, keys, upd_mask,
 # (DESIGN.md §5.3)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("aggregate", "max_new"))
+@functools.partial(jax.jit, static_argnames=("aggregate", "max_new",
+                                             "mesh", "axis",
+                                             "plane_search"))
 def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
               aggregate: bool = False, max_new: int = None,
-              rebuild=False):
+              rebuild=False, mesh=None, axis: str = "model",
+              plane_search: bool = False):
     """One serving epoch entirely on device: apply a batch of operations
     (contains/insert/delete via :func:`run_ops`; ``aggregate=True`` runs
     the flat-combined contains fold of :func:`run_contains_batch`
@@ -686,6 +689,31 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
     ``from_state_device`` rebuild instead of the incremental refresh —
     the overflow recovery path (DESIGN.md §5.4).
 
+    Sharded serving (DESIGN.md §5.5): ``mesh`` (static, hashable) turns
+    the epoch's plane work sharded end-to-end — the refresh runs as
+    ``device_index.refresh_device_sharded`` and, with ``plane_search``,
+    the batch's membership answers come from the *sharded* tiered
+    search over the carried plane — no replicated ``[L, W]`` rectangle
+    is materialized at any point.  Pass a plane laid out by
+    ``sharding.shard_index_plane``; the epoch's plane output keeps that
+    layout (both refresh branches are constrained to it).  An
+    indivisible ``width % S`` silently degrades to the replicated paths
+    (same values).
+
+    ``plane_search`` (static; requires ``aggregate=True`` — the answers
+    are membership verdicts, so the batch must be contains-only)
+    answers ``results``/``path_len`` from the carried plane instead of
+    the state walk: ``results`` is the plane's membership verdict and
+    ``path_len`` is ``level_found`` (the search-depth analogue of the
+    walk length; same adaptivity signal, different unit).  The plane
+    entering the epoch is the membership snapshot the state-walk
+    answers are computed against, so the verdicts are bit-identical —
+    *except* while the previous epoch overflowed (the plane is stale by
+    exactly the dropped keys until the scheduled rebuild lands;
+    ``run_serving``'s state machine bounds that to one epoch).  The
+    rebalance fold still runs either way — hit counting is what adapts
+    the structure.
+
     Returns ``(state, plane, results[B], path_len[B], overflow)`` where
     ``overflow`` (int32 scalar) counts alive keys the refreshed plane
     could not represent this epoch: inserts beyond ``max_new`` plus
@@ -695,12 +723,26 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
     ``size > width`` — that persists in ``overflow`` as the host-visible
     signal to re-plan with a wider plane."""
     from repro.core import device_index as dix
-    if aggregate:
+    n_levels, width = plane.keys.shape
+    sharded = (mesh is not None and axis in mesh.shape
+               and width % mesh.shape[axis] == 0)
+    if plane_search:
+        if not aggregate:
+            raise ValueError("plane_search answers membership from the "
+                             "index plane — contains-only batches, i.e. "
+                             "aggregate=True")
+        from repro.kernels import ops as kops
+        if sharded:
+            res, _, plen = kops.splay_search_sharded(plane, keys,
+                                                     mesh=mesh, axis=axis)
+        else:
+            res, _, plen = kops.splay_search(plane, keys, sharded=False)
+        st, _, _ = run_contains_batch(st, keys, upd_mask, aggregate=True)
+    elif aggregate:
         st, res, plen = run_contains_batch(st, keys, upd_mask,
                                            aggregate=True)
     else:
         st, res, plen = run_ops(st, kinds, keys, upd_mask)
-    n_levels, width = plane.keys.shape
     if max_new is None:
         # an epoch cannot insert more keys than it has ops: bound the
         # refresh's new-key extraction by the batch size
@@ -714,21 +756,46 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
         return pl, ovf
 
     def incremental(_):
+        if sharded:
+            return dix.refresh_device_sharded(st, plane, max_new=max_new,
+                                              mesh=mesh, axis=axis)
         return dix.refresh_device(st, plane, max_new=max_new,
                                   return_overflow=True)
 
     plane, overflow = jax.lax.cond(rebuild, full_rebuild, incremental,
                                    operand=None)
+    if sharded:
+        # keep the carry in the width-sharded layout whichever branch
+        # produced it (the rebuild branch is replicated math)
+        from jax.sharding import NamedSharding
+        from repro.parallel import sharding as shd
+        specs = shd.index_plane_specs(type(plane), axis)
+        plane = type(plane)(*(
+            jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
+            for x, s in zip(plane, specs)))
     return st, plane, res, plen, overflow
 
 
-@functools.partial(jax.jit, static_argnames=("aggregate", "max_new"))
+@functools.partial(jax.jit, static_argnames=("aggregate", "max_new",
+                                             "mesh", "axis",
+                                             "plane_search"))
 def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
-                aggregate: bool = False, max_new: int = None):
+                aggregate: bool = False, max_new: int = None,
+                mesh=None, axis: str = "model",
+                plane_search: bool = False):
     """The jitted epoch *loop*: scan :func:`run_epoch` over ``[E, B]``
     op batches, threading (state, plane, rebuild-pending) through the
     carry — E epochs of search + update + index refresh with zero host
     round-trips of index-plane data.
+
+    ``mesh``/``axis``/``plane_search`` thread straight into
+    :func:`run_epoch` (DESIGN.md §5.5): with a mesh and a
+    ``shard_index_plane``-laid-out plane, every epoch's refresh runs
+    width-sharded and (with ``plane_search``) the membership answers
+    come from the sharded tiered search — the serving loop never
+    materializes a replicated ``[L, W]`` rectangle, which is what lets
+    the plane outgrow one device's memory *in serving*, not just during
+    refresh.
 
     Overflow state machine (DESIGN.md §5.4): an epoch whose refresh
     reports nonzero overflow arms a pending flag, and the *next*
@@ -751,7 +818,9 @@ def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
         s, pl, res, plen, ovf = run_epoch(s, pl, kd, ks, up,
                                           aggregate=aggregate,
                                           max_new=max_new,
-                                          rebuild=pending)
+                                          rebuild=pending,
+                                          mesh=mesh, axis=axis,
+                                          plane_search=plane_search)
         pressure = s.size + B > width
         pending = (ovf > 0) | (pressure & ~pressed)
         return (s, pl, pending, pressure), (res, plen, ovf)

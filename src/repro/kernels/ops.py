@@ -17,15 +17,30 @@ def on_tpu() -> bool:
 
 
 def splay_search(level_keys, queries, query_block: int = 256,
-                 rank_map=None, widths=None):
+                 rank_map=None, widths=None, sharded=None):
     """Batched level-array search (see kernels/splay_search.py).  Queries
     of any length (the kernel wrapper pads to the block multiple and
     slices back).  ``level_keys`` may be a bare [L, W] matrix or an index
     plane struct (``DeviceLevelArrays``/``LevelArrays``) — the struct's
-    precomputed rank_map/widths skip the on-the-fly window derivation."""
+    precomputed rank_map/widths skip the on-the-fly window derivation.
+    A concretely width-sharded plane dispatches to the sharded search
+    (``sharded=None`` auto-detects; True/False force either path —
+    DESIGN.md §5.5)."""
     return ssk.splay_search(
         level_keys, queries, query_block=query_block,
-        interpret=not on_tpu(), rank_map=rank_map, widths=widths)
+        interpret=not on_tpu(), rank_map=rank_map, widths=widths,
+        sharded=sharded)
+
+
+def splay_search_sharded(plane, queries, query_block: int = 256,
+                         mesh=None, axis: str = "model"):
+    """Width-sharded tiered search: the descent under ``shard_map`` with
+    query blocks routed to the shard owning their bottom-row rank window
+    (see kernels/splay_search.py, DESIGN.md §5.5).  Falls back to the
+    replicated path when no mesh resolves or the width is indivisible."""
+    return ssk.splay_search_sharded(
+        plane, queries, query_block=query_block,
+        interpret=not on_tpu(), mesh=mesh, axis=axis)
 
 
 def splay_search_full(level_keys, queries, query_block: int = 256):

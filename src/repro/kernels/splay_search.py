@@ -38,14 +38,17 @@ which case the struct's precomputed rank map and row widths ride along
 (both the host build and the device build/refresh emit them); the
 ``rank_windows`` jnp fallback below serves bare-matrix callers only.
 
-Sharding (DESIGN.md §5.4): a plane laid out width-sharded by
-``parallel.sharding.shard_index_plane`` is accepted directly — the
-wrapper gathers its arrays to a replicated layout before the kernel call
-(the Pallas kernel is a single-device program; the *refresh* is what
-runs sharded) and constrains the padded query batch to the ``"batch"``
-logical axis under the active mesh.  Executing the search itself
-width-sharded, with query blocks routed to the shard owning their rank
-window, is an open ROADMAP item.
+Sharding (DESIGN.md §5.5): a plane laid out width-sharded by
+``parallel.sharding.shard_index_plane`` executes the search *sharded* —
+``splay_search_sharded`` runs the tiered descent under ``shard_map``
+over the ``splay_width`` axis, with query blocks routed to the shard
+owning their bottom-row rank window by a sharded ``searchsorted`` over
+the per-shard boundary keys (the §5.4 range-boundary table) and each
+shard descending its own key-range segment; one stacked ``psum``
+composes the outputs.  ``splay_search`` dispatches there automatically
+for a concretely width-sharded plane; gather-to-replicated remains the
+documented fallback (no mesh, one shard, indivisible width, or
+``sharded=False``) and is all ``splay_search_full`` ever does.
 """
 
 from __future__ import annotations
@@ -56,10 +59,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+from jax.sharding import PartitionSpec as P
 
 from repro.parallel import sharding as shd
 
 PAD_KEY = 2 ** 31 - 1
+NEG_INF_KEY = -(2 ** 31) + 1        # splaylist.NEG_INF_32 (head sentinel)
 DEFAULT_QUERY_BLOCK = 256
 
 
@@ -175,20 +180,33 @@ def _kernel_tiered(fetch_ref, widths_ref, q_ref, row_ref, rm_ref,
 
 def splay_search(level_keys, queries, query_block: int =
                  DEFAULT_QUERY_BLOCK, interpret: bool = True,
-                 rank_map=None, widths=None):
+                 rank_map=None, widths=None, sharded=None):
     """Tiered batched search.  level_keys: int32 [n_levels, width]
     (sorted rows, +INF padded, nested) — or an index plane struct
     (``DeviceLevelArrays``/``LevelArrays``), whose rank_map/widths are
-    used directly.  A width-sharded plane (``shard_index_plane`` layout)
-    is gathered to replicated before the single-device kernel runs; the
-    query batch is constrained to the ``"batch"`` logical axis when a
-    mesh is active (no-op otherwise).  queries int32 [q] (any length —
-    padded to the block multiple internally).  rank_map/widths:
-    precomputed companions (derived on the fly when a bare matrix is
-    passed without them).  Returns (found [q] bool, rank [q] int32,
-    level_found [q] int32)."""
+    used directly.  queries int32 [q] (any length — padded to the block
+    multiple internally).  rank_map/widths: precomputed companions
+    (derived on the fly when a bare matrix is passed without them).
+    Returns (found [q] bool, rank [q] int32, level_found [q] int32).
+
+    Dispatch (DESIGN.md §5.5): ``sharded=None`` routes a plane that is
+    *concretely* width-sharded (``shard_index_plane`` layout, detected
+    by ``sharding.plane_width_mesh``) to :func:`splay_search_sharded` —
+    the descent then runs under ``shard_map`` and no replicated
+    ``[L, W]`` rectangle is materialized.  ``sharded=True`` forces that
+    path (falling back to replicated if no mesh can be resolved);
+    ``sharded=False`` forces the legacy gather-to-replicated execution
+    (the single-device kernel on the gathered plane) — the seam the
+    parity tests pin.  Replicated execution constrains the query batch
+    to the ``"batch"`` logical axis when a mesh is active."""
     if hasattr(level_keys, "rank_map"):        # index plane struct
         plane = level_keys
+        if sharded is None:
+            sharded = shd.plane_width_mesh(plane) is not None
+        if sharded:
+            return splay_search_sharded(plane, queries,
+                                        query_block=query_block,
+                                        interpret=interpret)
         level_keys = _replicated(jnp.asarray(plane.keys))
         if rank_map is None:
             rank_map = _replicated(jnp.asarray(plane.rank_map))
@@ -260,6 +278,149 @@ def _splay_search_arrays(level_keys, queries, query_block: int =
 
 
 # ---------------------------------------------------------------------------
+# width-sharded execution (DESIGN.md §5.5): ownership routing + per-shard
+# tiered descent on locally-assembled sub-planes
+# ---------------------------------------------------------------------------
+
+def _search_shard_body(bot, hts, queries, *, axis: str, n_levels: int,
+                       query_block: int, interpret: bool):
+    """Per-shard body of :func:`splay_search_sharded` (runs under
+    ``shard_map``; ``bot``/``hts`` are this shard's bottom-row /heights
+    blocks, queries are replicated).  Three stages:
+
+      1. *routing* — the §5.4 range-boundary table (scalar
+         ``all_gather`` of block-first bottom-row keys; shard 0's entry
+         is the −∞ sentinel so every query has exactly one owner) and
+         one sharded ``searchsorted`` assign each query the shard whose
+         contiguous key range contains it.  Ownership by bottom-row key
+         range means the owner's columns contain the query's bottom-row
+         rank window — including windows that straddle a shard boundary
+         on the *global* plane: the halo-established range bound closes
+         them against the local −∞/+∞ sentinels instead (the true
+         predecessor left of the boundary, when there is one, is by
+         construction not the bottom-row answer of an owned query).
+      2. *local descent* — the shard re-layers its own (bottom block,
+         heights block) into an [L, W/S] sub-plane (same mask/prefix-sum
+         pass as the refresh; rows of the sub-plane are the shard's key
+         range restricted to each level, so row membership — and hence
+         ``level_found`` — matches the global plane exactly) and runs
+         the unmodified tiered kernel on it.  O((L·W/S)·log W) assembly
+         amortized over the query batch; resident footprint O(L·W/S).
+      3. *composition* — local ranks lift to global by the shard's
+         column offset, and ONE stacked ``[3, q]`` ``psum`` (masked to
+         each query's owner) emits found/rank/level.
+
+    Wire per batch: one scalar all_gather + one [3, q] psum —
+    independent of W (the refresh's collectives are O(W); the search
+    adds only O(q))."""
+    from repro.core import device_index as dix
+    wl = bot.shape[0]
+    ax = jax.lax.axis_index(axis).astype(jnp.int32)
+
+    # ---- 1. routing: range-boundary table + sharded searchsorted.
+    # Queries clamp into (−∞ sentinel, +INF pad sentinel) for routing
+    # only: an all-pad block's boundary key IS the pad sentinel, so a
+    # q == PAD_KEY query must route to the last live range (whose
+    # window-bounded descent answers it like the replicated kernel,
+    # which never probes pad lanes), and a q below shard 0's −∞
+    # sentinel must still route to shard 0 (whose descent answers
+    # rank −1 / not-found exactly like the replicated kernel).
+    lo = jnp.where(ax == 0, jnp.int32(NEG_INF_KEY), bot[0])
+    bounds = jax.lax.all_gather(lo, axis)              # [S] boundary keys
+    owner = (jnp.searchsorted(bounds,
+                              jnp.clip(queries, NEG_INF_KEY,
+                                       PAD_KEY - 1),
+                              side="right")
+             .astype(jnp.int32) - 1)                   # in [0, S-1]
+    mine = owner == ax
+
+    # ---- 2. the tiered rank-windowed descent on the local sub-plane
+    local = dix._assemble_device(
+        bot, hts, jnp.full((wl,), -1, jnp.int32), n_levels)
+    f, r, lv = _splay_search_arrays(
+        local.keys, queries, query_block=query_block,
+        interpret=interpret, rank_map=local.rank_map,
+        widths=local.widths)
+
+    # ---- 3. composition: owner-masked stacked psum
+    rank_g = jnp.where(r >= 0, r + ax * wl, -1)
+    stacked = jnp.where(mine[None, :],
+                        jnp.stack([f.astype(jnp.int32), rank_g, lv]),
+                        0)
+    f_o, r_o, l_o = jax.lax.psum(stacked, axis)
+    return f_o > 0, r_o, l_o
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_search_fn(mesh, axis: str, n_levels: int, query_block: int,
+                       interpret: bool):
+    """Build (and cache) the jitted shard_map for one (mesh, axis,
+    n_levels, query_block) cell — planes are shape-stable, so serving
+    reuses one entry per mesh."""
+    body = functools.partial(
+        _search_shard_body, axis=axis, n_levels=n_levels,
+        query_block=query_block, interpret=interpret)
+    fn = shd.shard_map_compat(body, mesh=mesh,
+                              in_specs=(P(axis), P(axis), P()),
+                              out_specs=(P(), P(), P()))
+    return jax.jit(fn)
+
+
+def splay_search_sharded(level_keys, queries, query_block: int =
+                         DEFAULT_QUERY_BLOCK, interpret: bool = True,
+                         mesh=None, axis: str = "model"):
+    """Width-sharded tiered search (DESIGN.md §5.5): the rank-windowed
+    descent under ``shard_map`` over the ``splay_width`` axis.  Each
+    shard owns the contiguous key range of its plane segment (its
+    ``W/S`` columns of the sorted bottom row — the same ownership as
+    the §5.4 sharded refresh); query blocks route to their owner via a
+    sharded ``searchsorted`` over the per-shard boundary keys, the
+    owner runs the tiered kernel on its locally re-layered sub-plane,
+    and one stacked ``psum`` composes the outputs.  No replicated
+    ``[L, W]`` rectangle is ever materialized — per-shard residency is
+    O(L·W/S) and the per-batch wire is O(q), which is what lets
+    *serving* (not just refresh) outgrow one device's memory.
+
+    ``level_keys`` must be an index plane struct
+    (``DeviceLevelArrays``/``LevelArrays``).  Mesh resolution: the
+    ``mesh`` argument, else the plane's own concrete layout
+    (``sharding.plane_width_mesh``), else the active
+    ``sharding.use_mesh``.  Queries enter replicated over the mesh and
+    the outputs are replicated — same values on every device.
+
+    Equivalence: bit-identical to the replicated tiered search (and to
+    ``splay_search_full``) on every plane and query batch — membership,
+    bottom-row predecessor rank, and first-row-found are functions of
+    (plane, query) alone, and the per-shard sub-plane preserves row
+    membership exactly (asserted on 1/2/4-way host meshes in
+    ``tests/test_sharded_search.py``, boundary-straddling windows and
+    transient-empty rows included).
+
+    Fallback modes (never raises): no resolvable mesh, ``axis`` absent
+    from the mesh, or ``width % S != 0`` all route to the replicated
+    gather-to-replicated path with the same return convention."""
+    plane = level_keys
+    if not hasattr(plane, "rank_map"):
+        raise TypeError("splay_search_sharded takes an index plane "
+                        "struct (DeviceLevelArrays/LevelArrays), got "
+                        f"{type(level_keys).__name__}")
+    if mesh is None:
+        mesh = shd.plane_width_mesh(plane, axis) or shd.active_mesh()
+    n_levels, width = plane.keys.shape
+    if (mesh is None or axis not in mesh.shape
+            or width % mesh.shape[axis]):
+        return splay_search(plane, queries, query_block=query_block,
+                            interpret=interpret, sharded=False)
+    queries = jnp.asarray(queries)
+    if queries.shape[0] == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return jnp.zeros((0,), jnp.bool_), z, z
+    fn = _sharded_search_fn(mesh, axis, n_levels, query_block, interpret)
+    bot = jnp.asarray(plane.keys)[n_levels - 1]
+    return fn(bot, jnp.asarray(plane.heights), queries)
+
+
+# ---------------------------------------------------------------------------
 # seed kernel (baseline): whole matrix as one constant block
 # ---------------------------------------------------------------------------
 
@@ -313,8 +474,10 @@ def splay_search_full(level_keys, queries, query_block: int =
     """Seed baseline: the full [n_levels, width] matrix is a single
     constant-index block (always resident; O(L·W) compare per query
     block).  Queries of any length — padded internally.  Accepts an
-    index plane struct (width-sharded planes are gathered to replicated,
-    as in :func:`splay_search`) in place of the bare matrix."""
+    index plane struct in place of the bare matrix; unlike
+    :func:`splay_search` it never dispatches to sharded execution — a
+    width-sharded plane is always gathered to replicated here (the
+    baseline stays a single-device measurement)."""
     if hasattr(level_keys, "rank_map"):        # index plane struct
         level_keys = _replicated(jnp.asarray(level_keys.keys))
     queries = shd.constrain(jnp.asarray(queries), "batch")

@@ -8,8 +8,10 @@ device-resident index plane, run jitted serving epochs
 (``splaylist.run_serving`` — op batches + incremental plane refresh with
 the overflow/rebuild state machine), and, when the runtime exposes
 multiple devices (e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``),
-refresh the plane width-sharded over the model axis and verify it
-against the replicated refresh.
+run the serving loop sharded end-to-end over the model axis — sharded
+plane search answering the batches plus sharded refresh (DESIGN.md
+§5.5) — and verify every piece bit-identical against the replicated
+loop.
 """
 
 from __future__ import annotations
@@ -69,9 +71,38 @@ def splay_demo(args) -> dict:
 
     n_dev = len(jax.devices())
     if n_dev > 1 and W % n_dev == 0:
+        from repro.kernels import ops as kops
         mesh = jax.make_mesh((1, n_dev), ("data", "model"))
         plane_s = shd.shard_index_plane(plane, mesh)
-        # replay one op batch, then refresh sharded vs replicated
+
+        # end-to-end sharded serving (DESIGN.md §5.5): contains-only
+        # aggregate epochs answered from the *sharded* plane search,
+        # refreshed by the *sharded* refresh — vs the replicated loop
+        ck = np.zeros_like(kinds)
+        st_r, pl_r, res_r, plen_r, _ = sx.run_serving(
+            st, plane, jnp.asarray(ck), jnp.asarray(keys),
+            jnp.asarray(ups), aggregate=True, plane_search=True)
+        st_s, pl_s, res_s, plen_s, _ = sx.run_serving(
+            st, plane_s, jnp.asarray(ck), jnp.asarray(keys),
+            jnp.asarray(ups), aggregate=True, plane_search=True,
+            mesh=mesh)
+        serve_match = (
+            (np.asarray(res_s) == np.asarray(res_r)).all()
+            and (np.asarray(plen_s) == np.asarray(plen_r)).all()
+            and all((np.asarray(getattr(pl_s, f))
+                     == np.asarray(getattr(pl_r, f))).all()
+                    for f in ("keys", "widths", "heights", "rank_map")))
+
+        # the search alone, sharded vs gather-to-replicated dispatch
+        qs = jnp.asarray(keys[0])
+        f_s, r_s, l_s = kops.splay_search_sharded(pl_s, qs, mesh=mesh)
+        f_g, r_g, l_g = kops.splay_search(pl_s, qs, sharded=False)
+        search_match = bool(
+            (np.asarray(f_s) == np.asarray(f_g)).all()
+            and (np.asarray(r_s) == np.asarray(r_g)).all()
+            and (np.asarray(l_s) == np.asarray(l_g)).all())
+
+        # one mixed op batch, then refresh sharded vs replicated
         st3, _, _ = sx.run_ops(
             st, jnp.asarray(kinds[0]), jnp.asarray(keys[0]),
             jnp.asarray(ups[0]))
@@ -79,15 +110,22 @@ def splay_demo(args) -> dict:
                                               mesh=mesh)
         pr, ov_r = dix.refresh_device(st3, plane, max_new=B,
                                       return_overflow=True)
-        match = all(
+        refresh_match = all(
             (np.asarray(getattr(ps, f)) == np.asarray(getattr(pr, f))).all()
             for f in ("keys", "widths", "heights", "rank_map"))
-        out["sharded"] = {"shards": n_dev, "bit_identical": bool(match),
-                          "overflow": int(ov_s)}
-        print(f"sharded refresh on {n_dev} shards: bit_identical={match}, "
+        out["sharded"] = {
+            "shards": n_dev,
+            "serving_bit_identical": bool(serve_match),
+            "search_bit_identical": search_match,
+            "refresh_bit_identical": bool(refresh_match),
+            "overflow": int(ov_s)}
+        print(f"sharded serving on {n_dev} shards: "
+              f"epochs bit_identical={serve_match}, "
+              f"search bit_identical={search_match}, "
+              f"refresh bit_identical={refresh_match}, "
               f"overflow={int(ov_s)} (replicated {int(ov_r)})")
     else:
-        print(f"sharded refresh skipped ({n_dev} device(s); set "
+        print(f"sharded serving skipped ({n_dev} device(s); set "
               f"XLA_FLAGS=--xla_force_host_platform_device_count=4)")
     return out
 

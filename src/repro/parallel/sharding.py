@@ -11,11 +11,13 @@ special cases.
 
 Splay index plane (DESIGN.md §5.3–§5.4): the ``[L, W]`` rectangle carries
 the logical axes ``("splay_level", "splay_width")`` — levels replicated,
-width sharded over ``model`` when ``W`` divides the axis.  Three helpers
+width sharded over ``model`` when ``W`` divides the axis.  Four helpers
 cover its lifecycle: :func:`constrain_index_plane` (sharding constraints
 inside jit), :func:`index_plane_specs` (the ``PartitionSpec`` pytree the
-sharded refresh's ``shard_map`` uses), and :func:`shard_index_plane`
-(``device_put`` a host-built plane into the width-sharded layout).
+sharded refresh's and sharded search's ``shard_map`` use),
+:func:`shard_index_plane` (``device_put`` a host-built plane into the
+width-sharded layout), and :func:`plane_width_mesh` (detect that layout
+on a concrete plane — the search wrapper's dispatch seam).
 :func:`shard_map_compat` papers over the ``check_rep``/``check_vma``
 rename so every shard_map in the repo goes through one shim.
 """
@@ -210,6 +212,39 @@ def index_plane_specs(plane_cls, axis: str = "model"):
     return plane_cls(
         keys=P(None, axis), widths=P(), heights=P(axis),
         rank_map=P(None, axis), slots=P(axis))
+
+
+def plane_width_mesh(plane, axis: str = "model") -> Optional[Mesh]:
+    """The mesh a *concrete* width-sharded plane is laid out on, or None.
+
+    Detection (not resolution): returns ``plane.keys``'s mesh exactly
+    when the plane is materialized in the :func:`shard_index_plane`
+    layout — last dimension split over ``axis``, more than one shard,
+    width divisible.  Everything else is None: tracers (inside jit the
+    caller knows its own mesh and passes it explicitly), replicated
+    arrays, single-shard meshes, foreign layouts.  This is the dispatch
+    seam of ``kernels.splay_search.splay_search``: a plane that *is*
+    width-sharded routes to the sharded search instead of being
+    gathered to replicated."""
+    keys = getattr(plane, "keys", None)
+    if (not isinstance(keys, jax.Array)
+            or isinstance(keys, jax.core.Tracer)):
+        return None
+    sharding = getattr(keys, "sharding", None)
+    if not isinstance(sharding, NamedSharding):
+        return None
+    mesh = sharding.mesh
+    if axis not in mesh.shape or mesh.shape[axis] <= 1:
+        return None
+    spec = tuple(sharding.spec)
+    if len(spec) < 2:
+        return None
+    width_axes = spec[-1] if isinstance(spec[-1], tuple) else (spec[-1],)
+    if width_axes != (axis,):
+        return None
+    if keys.shape[-1] % mesh.shape[axis]:
+        return None
+    return mesh
 
 
 def shard_index_plane(plane, mesh: Optional[Mesh] = None,
