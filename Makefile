@@ -18,13 +18,15 @@ bench-smoke:
 bench:
 	$(PY) benchmarks/run.py --full
 
-# sharded-search bench on a forced 1x4 host mesh, written to its own
-# JSON (the parity battery runs once, via tests/test_sharded_search.py's
-# subprocess).  The CI parity step and the nightly bench job both invoke
+# routed sharded-search bench on a forced 1x4 host mesh, written to its
+# own (gitignored) JSON — the committed trajectory entry lives in the
+# search_sharded key of BENCH_kernels.json (via kernels_bench).  The
+# parity battery runs once, via tests/test_sharded_search.py's
+# subprocess.  The CI parity step and the nightly bench job both invoke
 # exactly this target, so local and CI runs can't drift.
 bench-sharded-search:
-	$(PY) benchmarks/sharded_search_probe.py --bench --width 4096 \
-	  --nq 4096 | tee BENCH_search_sharded.json
+	$(PY) benchmarks/sharded_search_probe.py --bench --routed \
+	  --width 4096 --nq 8192 | tee BENCH_search_sharded.json
 
 # docs gate: docs/API.md names resolve against the modules; the README
 # quickstart blocks execute (scripts/check_api_docs.py, CI `docs` job)

@@ -24,10 +24,14 @@ module keeps the same layout but makes it live where it is consumed:
     not represent (DESIGN.md §5.4 rebuild protocol);
   * :func:`refresh_device_sharded` — the same pipeline under
     ``shard_map`` over the ``splay_width`` logical axis: each shard
-    owns a contiguous key range (W/S columns of the sorted bottom row),
-    boundary halos travel by ``ppermute``, prefix sums compose via
-    exclusive cross-shard scans, and overflow is all-reduced — the
-    scaling path for planes larger than one device's memory.
+    owns a contiguous key range of the sorted bottom row, the boundary
+    table travels by a scalar ``all_gather`` (suffix-min of block-first
+    keys), prefix sums compose via exclusive cross-shard scans, and
+    overflow is all-reduced — the scaling path for planes larger than
+    one device's memory.  ``split="mass"`` (DESIGN.md §5.6) re-places
+    the shard boundaries at the hit-counter mass quantiles each epoch,
+    emitting a *segmented* plane whose routed-search load balances
+    under skew.
 
 Scatter- and sort-free by construction (the hot path): XLA lowers
 gathers, cumsums and ``top_k`` to tight vectorized loops on every
@@ -377,7 +381,7 @@ def refresh_device(st: sx.SplayState, prev: DeviceLevelArrays,
 
 def _refresh_shard_body(st: sx.SplayState, prev: DeviceLevelArrays, *,
                         axis: str, n_shards: int, n_levels: int,
-                        width: int, max_new: int):
+                        width: int, max_new: int, split: str = "lanes"):
     """Per-shard body of :func:`refresh_device_sharded` (runs under
     ``shard_map``; ``prev`` leaves are this shard's blocks, the state is
     replicated).  Stages mirror the replicated refresh — classification,
@@ -414,18 +418,30 @@ def _refresh_shard_body(st: sx.SplayState, prev: DeviceLevelArrays, *,
     col_g = (ax * wl + col_l).astype(jnp.int32)
 
     bot_l = prev.keys[n_levels - 1]                    # [wl] own block
-    w_bot = prev.widths[n_levels - 1]                  # global (replicated)
 
-    # ---- owned key range: block's first key .. right neighbour's first
-    first = bot_l[:1]
-    halo = jax.lax.ppermute(first, axis,
-                            [(i, (i - 1) % S) for i in range(S)])
-    lo = jnp.where(ax == 0, jnp.int32(sx.NEG_INF_32), bot_l[0])
-    hi = jnp.where(ax == S - 1, jnp.int32(PAD_KEY), halo[0])
+    # ---- owned key range from the §5.4 boundary table, generalized to
+    # the suffix-min of block-first keys: a *segmented* prev plane (the
+    # §5.6 mass-weighted split) can leave an interior block empty, whose
+    # raw +INF first key must not shadow the live blocks to its right
+    # (a one-element ppermute halo would double-claim their range).  On
+    # a packed prev only trailing blocks are empty, the suffix-min is
+    # the identity, and lo/hi equal the PR-3 halo construction exactly.
+    # The same helper builds the search's query-routing table — refresh
+    # and search must agree on ownership for every layout.
+    from repro.parallel import sharding as shd
+    raw = jax.lax.all_gather(
+        jnp.where(ax == 0, jnp.int32(sx.NEG_INF_32), bot_l[0]), axis)
+    bounds = shd.suffix_min_bounds(raw)
+    lo = bounds[ax]
+    hi = jnp.where(ax == S - 1, jnp.int32(PAD_KEY),
+                   bounds[jnp.minimum(ax + 1, S - 1)])
 
     # ---- slot-map validation (staleness is a global verdict, psum'd,
-    # so every shard takes the same branch as the replicated refresh)
-    lane = col_g < w_bot
+    # so every shard takes the same branch as the replicated refresh).
+    # Live lanes are a prefix of the *block* — the global prefix mask
+    # `col_g < w_bot` only on packed planes, so count them per block
+    # (identical masks there; also correct on segmented planes).
+    lane = col_l < jnp.sum((bot_l != PAD_KEY).astype(jnp.int32))
     sc = jnp.clip(prev.slots, 0, cap - 1)
     match = lane & (jnp.take(st.key, sc).astype(jnp.int32) == bot_l)
     stale = jax.lax.psum(
@@ -510,6 +526,51 @@ def _refresh_shard_body(st: sx.SplayState, prev: DeviceLevelArrays, *,
     pos_g = jnp.arange(width, dtype=jnp.int32)
     keys_g = pick(segs_k, pos_g, jnp.int32(PAD_KEY))   # [W] merged row
     hts_g = pick(segs_h, pos_g, jnp.int32(0))
+    overflow = (jnp.maximum(total_raw - kk, 0)
+                + jnp.maximum(total - width, 0)).astype(jnp.int32)
+
+    if split == "mass":
+        # ---- §5.6 mass-weighted re-split: instead of packing the
+        # merged row wall-to-wall, choose shard boundaries at the
+        # access-mass quantiles of the state's hit counters (selfhits
+        # gathered through the merged slot ids — the same counters the
+        # splay heights are maintained from; unknown slots weigh 1, so
+        # a counterless plane degrades to the lane-equal split) and
+        # give each shard its segment [b_s, b_{s+1}) packed into its
+        # own block prefix, +INF pads after.  The plane becomes
+        # *segmented*: per-block sorted runs with pads at segment
+        # boundaries — searched correctly ONLY by the sharded search
+        # (keys/rank_map/heights hold each shard's local sub-plane;
+        # widths stays the global per-row live count).
+        total_c = jnp.minimum(total, width)
+        slot_g = pick(segs_s, pos_g, jnp.int32(-1))    # [W] packed slots
+        # per-key mass saturates at 2^16 so the int32 cumsum stays
+        # exact for any plane width this repo reaches (W * 2^16 < 2^31
+        # for W <= 2^14) however long the counters accumulate — the
+        # quantiles only need ~M/S granularity, which a 65536x hot/cold
+        # contrast delivers with room to spare
+        sh_g = jnp.minimum(
+            jnp.take(st.selfhits,
+                     jnp.clip(slot_g, 0, cap - 1)).astype(jnp.int32),
+            jnp.int32(2 ** 16))
+        mass = jnp.where(pos_g < total_c,
+                         1 + jnp.where(slot_g >= 0, sh_g, 0), 0)
+        bounds_r = shd.mass_split_bounds(jnp.cumsum(mass), total_c,
+                                         S, wl)
+        b_lo = bounds_r[ax]
+        seg_live = col_l < bounds_r[ax + 1] - b_lo
+        src = jnp.clip(b_lo + col_l, 0, width - 1)
+        k_seg = jnp.where(seg_live, jnp.take(keys_g, src),
+                          jnp.int32(PAD_KEY))
+        h_seg = jnp.where(seg_live, jnp.take(hts_g, src), 0)
+        s_seg = jnp.where(seg_live, jnp.take(slot_g, src), -1)
+        local = _assemble_device(k_seg, h_seg, s_seg, n_levels)
+        widths_g = jax.lax.psum(local.widths, axis)
+        plane = DeviceLevelArrays(
+            keys=local.keys, widths=widths_g, heights=local.heights,
+            rank_map=local.rank_map, slots=local.slots)
+        return plane, overflow
+
     slots_own = pick(segs_s, col_g, jnp.int32(-1))     # own lanes only
 
     # ---- re-layering: per-shard mask/prefix-sum on own columns, then
@@ -560,8 +621,6 @@ def _refresh_shard_body(st: sx.SplayState, prev: DeviceLevelArrays, *,
 
     heights_own = jnp.where(k_own != PAD_KEY, hraw_own, 0).astype(jnp.int32)
 
-    overflow = (jnp.maximum(total_raw - kk, 0)
-                + jnp.maximum(total - width, 0)).astype(jnp.int32)
     plane = DeviceLevelArrays(keys=rows_own, widths=widths_g,
                               heights=heights_own, rank_map=rank_own,
                               slots=slots_own)
@@ -570,17 +629,17 @@ def _refresh_shard_body(st: sx.SplayState, prev: DeviceLevelArrays, *,
 
 @functools.lru_cache(maxsize=None)
 def _sharded_refresh_fn(mesh, axis: str, n_levels: int, width: int,
-                        max_new: int):
+                        max_new: int, split: str = "lanes"):
     """Build (and cache) the jitted shard_map for one (mesh, axis,
-    shape, max_new) cell — planes are shape-stable, so serving reuses
-    one entry per mesh."""
+    shape, max_new, split) cell — planes are shape-stable, so serving
+    reuses one entry per mesh."""
     from repro.parallel import sharding as shd
     from jax.sharding import PartitionSpec as P
     S = mesh.shape[axis]
     specs = shd.index_plane_specs(DeviceLevelArrays, axis)
     body = functools.partial(
         _refresh_shard_body, axis=axis, n_shards=S, n_levels=n_levels,
-        width=width, max_new=max_new)
+        width=width, max_new=max_new, split=split)
     fn = shd.shard_map_compat(body, mesh=mesh,
                               in_specs=(P(), specs),
                               out_specs=(specs, P()))
@@ -589,7 +648,7 @@ def _sharded_refresh_fn(mesh, axis: str, n_levels: int, width: int,
 
 def refresh_device_sharded(st: sx.SplayState, prev: DeviceLevelArrays,
                            max_new: int = 1024, mesh=None,
-                           axis: str = "model"):
+                           axis: str = "model", split: str = "lanes"):
     """Width-sharded incremental refresh: :func:`refresh_device` under
     ``shard_map`` over the ``splay_width`` logical axis (DESIGN.md
     §5.4), so a plane too large for one device's memory refreshes with
@@ -612,25 +671,76 @@ def refresh_device_sharded(st: sx.SplayState, prev: DeviceLevelArrays,
     represent — inserts beyond ``max_new`` plus merged lanes beyond
     ``width`` (see :func:`refresh_device` for the rebuild protocol).
 
-    Fallback modes (never raises): no mesh — neither passed nor active
-    via ``sharding.use_mesh`` — or ``axis`` absent from the mesh, or
-    ``width`` not divisible by the axis size, all route to the
-    replicated :func:`refresh_device` with the same return convention.
+    ``split`` (static) picks the shard-boundary rule (DESIGN.md §5.6):
+    ``"lanes"`` (default) packs the merged row wall-to-wall — equal
+    lane count per shard, bit-identical to the replicated refresh;
+    ``"mass"`` places the boundaries at the access-mass quantiles of
+    the state's hit counters (``selfhits`` gathered through the merged
+    slot ids; unknown slots weigh 1), each shard packing its segment
+    into its own block prefix with +INF pads after — a *segmented*
+    plane whose routed-search load balances under skew
+    (``routing_max_share`` → ~1/S).  A mass-split plane must be
+    searched by the *sharded* search (``kernels.splay_search``'s
+    routed or masked paths handle segmented planes; the
+    gather-to-replicated path assumes a packed bottom row) and is
+    accepted as ``prev`` by either split mode of this refresh *on the
+    sharded path*.
 
-    Equivalence: on any 1×N host mesh the result is bit-identical to
-    the replicated refresh on ``keys``/``widths``/``heights``/
-    ``rank_map`` (asserted in ``tests/test_sharded_refresh.py``); the
-    ``slots`` companion agrees on live lanes (pad lanes are unspecified
-    in both paths and never read)."""
+    Fallback modes: no mesh — neither passed nor active via
+    ``sharding.use_mesh`` — or ``axis`` absent from the mesh, or
+    ``width`` not divisible by the axis size, all route to the
+    replicated :func:`refresh_device` (which packs — ``split`` is
+    moot) with the same return convention.  One exception raises: a
+    *concrete segmented* ``prev`` on that fallback (``ValueError`` —
+    the replicated refresh's packed-row invariants would silently
+    corrupt it; see :func:`plane_is_segmented`).
+
+    Equivalence: on any 1×N host mesh the ``"lanes"`` result is
+    bit-identical to the replicated refresh on ``keys``/``widths``/
+    ``heights``/``rank_map`` (asserted in
+    ``tests/test_sharded_refresh.py``); the ``slots`` companion agrees
+    on live lanes (pad lanes are unspecified in both paths and never
+    read).  The ``"mass"`` result indexes the same key set (same
+    bottom-row membership and heights, different column placement) —
+    asserted through search-answer parity in
+    ``benchmarks/sharded_search_probe.py --parity``."""
     from repro.parallel import sharding as shd
+    if split not in ("lanes", "mass"):
+        raise ValueError(f"split must be 'lanes' or 'mass', got {split!r}")
     mesh = mesh if mesh is not None else shd.active_mesh()
     n_levels, width = prev.keys.shape
     if (mesh is None or axis not in mesh.shape
             or width % mesh.shape[axis]):
+        if plane_is_segmented(prev):
+            raise ValueError(
+                "segmented (mass-split) plane cannot take the "
+                "replicated refresh fallback — its interior pad runs "
+                "break the packed-row invariants (classification "
+                "searchsorted, merge).  Pass a mesh so the sharded "
+                "refresh handles it (split='lanes' repacks), or rebuild "
+                "with from_state_device first")
         return refresh_device(st, prev, max_new=max_new,
                               return_overflow=True)
-    fn = _sharded_refresh_fn(mesh, axis, n_levels, width, max_new)
+    fn = _sharded_refresh_fn(mesh, axis, n_levels, width, max_new, split)
     return fn(st, prev)
+
+
+def plane_is_segmented(plane) -> bool:
+    """True when a *concrete* plane's bottom row has interior pad runs —
+    the §5.6 mass-split layout.  Segmented planes are only valid on the
+    sharded refresh/search paths; the replicated ones assume a packed
+    sorted row and would corrupt/answer wrongly, so their entry points
+    refuse concrete segmented inputs.  Tracers return False (inside jit
+    the caller owns layout discipline — keep ``mesh``/``split``
+    consistent across a serving session)."""
+    keys = getattr(plane, "keys", None)
+    if isinstance(keys, jax.core.Tracer) or keys is None:
+        return False
+    import numpy as np
+    live = np.asarray(keys[-1]) != PAD_KEY
+    if not live.any():
+        return False
+    return not bool(live[: int(np.nonzero(live)[0][-1]) + 1].all())
 
 
 def to_host(plane: DeviceLevelArrays):

@@ -668,13 +668,40 @@ def run_contains_batch(st: SplayState, keys, upd_mask,
 # (DESIGN.md §5.3)
 # ---------------------------------------------------------------------------
 
+def _check_plane_dispatch(plane, mesh, axis, split):
+    """Guard for the meshless (replicated) epoch paths: a mass split
+    needs the sharded refresh, and a *concrete* segmented plane cannot
+    take any replicated path — the packed-row invariants would return
+    wrong answers / corrupt the refresh silently (DESIGN.md §5.6).
+    Tracer planes pass (inside an outer jit the caller keeps
+    ``mesh``/``split`` consistent across the session)."""
+    from repro.core import device_index as dix
+    width = plane.keys.shape[1]
+    sharded = (mesh is not None and axis in mesh.shape
+               and width % mesh.shape[axis] == 0)
+    if sharded:
+        return
+    if split == "mass":
+        raise ValueError(
+            "split='mass' requires the width-sharded path — pass mesh= "
+            "with a plane width divisible by the axis size")
+    if dix.plane_is_segmented(plane):
+        raise ValueError(
+            "segmented (mass-split) plane on the replicated epoch path "
+            "— pass mesh= (a split='lanes' refresh repacks it) or "
+            "rebuild with from_state_device before meshless serving")
+
+
 @functools.partial(jax.jit, static_argnames=("aggregate", "max_new",
                                              "mesh", "axis",
-                                             "plane_search"))
-def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
-              aggregate: bool = False, max_new: int = None,
-              rebuild=False, mesh=None, axis: str = "model",
-              plane_search: bool = False):
+                                             "plane_search", "split",
+                                             "route_capacity",
+                                             "route_slack"))
+def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
+               aggregate: bool = False, max_new: int = None,
+               rebuild=False, mesh=None, axis: str = "model",
+               plane_search: bool = False, split: str = "lanes",
+               route_capacity: int = None, route_slack: float = None):
     """One serving epoch entirely on device: apply a batch of operations
     (contains/insert/delete via :func:`run_ops`; ``aggregate=True`` runs
     the flat-combined contains fold of :func:`run_contains_batch`
@@ -689,16 +716,27 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
     ``from_state_device`` rebuild instead of the incremental refresh —
     the overflow recovery path (DESIGN.md §5.4).
 
-    Sharded serving (DESIGN.md §5.5): ``mesh`` (static, hashable) turns
-    the epoch's plane work sharded end-to-end — the refresh runs as
-    ``device_index.refresh_device_sharded`` and, with ``plane_search``,
-    the batch's membership answers come from the *sharded* tiered
-    search over the carried plane — no replicated ``[L, W]`` rectangle
-    is materialized at any point.  Pass a plane laid out by
-    ``sharding.shard_index_plane``; the epoch's plane output keeps that
-    layout (both refresh branches are constrained to it).  An
-    indivisible ``width % S`` silently degrades to the replicated paths
-    (same values).
+    Sharded serving (DESIGN.md §5.5–§5.6): ``mesh`` (static, hashable)
+    turns the epoch's plane work sharded end-to-end — the refresh runs
+    as ``device_index.refresh_device_sharded`` and, with
+    ``plane_search``, the batch's membership answers come from the
+    *routed* sharded search over the carried plane (the all_to_all
+    query exchange; per-shard search compute O(B/S)) — no replicated
+    ``[L, W]`` rectangle is materialized at any point.  Pass a plane
+    laid out by ``sharding.shard_index_plane``; the epoch's plane
+    output keeps that layout (both refresh branches are constrained to
+    it).  An indivisible ``width % S`` silently degrades to the
+    replicated paths (same values).  ``split`` (static,
+    ``"lanes"``/``"mass"``) is the sharded refresh's boundary rule —
+    ``"mass"`` re-splits the shard boundaries every epoch at the hit-
+    counter mass quantiles, keeping the routed exchange's per-shard
+    occupancy near B/S under skew (the full-rebuild recovery branch
+    always emits the packed layout; the next incremental refresh
+    re-splits it).  ``route_capacity``/``route_slack`` (static) size
+    the exchange's per-shard receive block
+    (``kernels.splay_search.route_capacity`` by default); queries past
+    it spill to the masked full-batch trace — answers stay exact, the
+    epoch just pays the replicated-trace cost for that batch.
 
     ``plane_search`` (static; requires ``aggregate=True`` — the answers
     are membership verdicts, so the batch must be contains-only)
@@ -714,27 +752,39 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
     rebalance fold still runs either way — hit counting is what adapts
     the structure.
 
-    Returns ``(state, plane, results[B], path_len[B], overflow)`` where
-    ``overflow`` (int32 scalar) counts alive keys the refreshed plane
-    could not represent this epoch: inserts beyond ``max_new`` plus
-    alive keys beyond the plane width.  Nonzero overflow means the
-    plane is stale until the caller (or :func:`run_serving`'s carry)
-    triggers the rebuild; a rebuild at the same shape cannot fix
-    ``size > width`` — that persists in ``overflow`` as the host-visible
-    signal to re-plan with a wider plane."""
+    Returns ``(state, plane, results[B], path_len[B], overflow,
+    spill)`` where ``overflow`` (int32 scalar) counts alive keys the
+    refreshed plane could not represent this epoch: inserts beyond
+    ``max_new`` plus alive keys beyond the plane width.  Nonzero
+    overflow means the plane is stale until the caller (or
+    :func:`run_serving`'s carry) triggers the rebuild; a rebuild at the
+    same shape cannot fix ``size > width`` — that persists in
+    ``overflow`` as the host-visible signal to re-plan with a wider
+    plane.  ``spill`` (int32 scalar) counts the batch's queries
+    answered through the routed exchange's spill path this epoch (0
+    except on the sharded ``plane_search`` path) — persistent nonzero
+    spill is the signal to raise ``route_capacity`` or switch
+    ``split="mass"``."""
     from repro.core import device_index as dix
     n_levels, width = plane.keys.shape
     sharded = (mesh is not None and axis in mesh.shape
                and width % mesh.shape[axis] == 0)
+    spill = jnp.zeros((), jnp.int32)
     if plane_search:
         if not aggregate:
             raise ValueError("plane_search answers membership from the "
                              "index plane — contains-only batches, i.e. "
                              "aggregate=True")
         from repro.kernels import ops as kops
+        from repro.kernels import splay_search as ssk
         if sharded:
-            res, _, plen = kops.splay_search_sharded(plane, keys,
-                                                     mesh=mesh, axis=axis)
+            res, _, plen, rstats = kops.splay_search_sharded(
+                plane, keys, mesh=mesh, axis=axis,
+                capacity=route_capacity,
+                slack=(route_slack if route_slack is not None
+                       else ssk.DEFAULT_ROUTE_SLACK),
+                return_stats=True)
+            spill = rstats.spill
         else:
             res, _, plen = kops.splay_search(plane, keys, sharded=False)
         st, _, _ = run_contains_batch(st, keys, upd_mask, aggregate=True)
@@ -758,7 +808,8 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
     def incremental(_):
         if sharded:
             return dix.refresh_device_sharded(st, plane, max_new=max_new,
-                                              mesh=mesh, axis=axis)
+                                              mesh=mesh, axis=axis,
+                                              split=split)
         return dix.refresh_device(st, plane, max_new=max_new,
                                   return_overflow=True)
 
@@ -773,29 +824,53 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
         plane = type(plane)(*(
             jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
             for x, s in zip(plane, specs)))
-    return st, plane, res, plen, overflow
+    return st, plane, res, plen, overflow, spill
+
+
+def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
+              aggregate: bool = False, max_new: int = None,
+              rebuild=False, mesh=None, axis: str = "model",
+              plane_search: bool = False, split: str = "lanes",
+              route_capacity: int = None, route_slack: float = None):
+    _check_plane_dispatch(plane, mesh, axis, split)
+    return _run_epoch(st, plane, kinds, keys, upd_mask,
+                      aggregate=aggregate, max_new=max_new,
+                      rebuild=rebuild, mesh=mesh, axis=axis,
+                      plane_search=plane_search, split=split,
+                      route_capacity=route_capacity,
+                      route_slack=route_slack)
+
+
+run_epoch.__doc__ = _run_epoch.__doc__
 
 
 @functools.partial(jax.jit, static_argnames=("aggregate", "max_new",
                                              "mesh", "axis",
-                                             "plane_search"))
-def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
-                aggregate: bool = False, max_new: int = None,
-                mesh=None, axis: str = "model",
-                plane_search: bool = False):
+                                             "plane_search", "split",
+                                             "route_capacity",
+                                             "route_slack"))
+def _run_serving(st: SplayState, plane, kinds, keys, upd_mask,
+                 aggregate: bool = False, max_new: int = None,
+                 mesh=None, axis: str = "model",
+                 plane_search: bool = False, split: str = "lanes",
+                 route_capacity: int = None, route_slack: float = None):
     """The jitted epoch *loop*: scan :func:`run_epoch` over ``[E, B]``
     op batches, threading (state, plane, rebuild-pending) through the
     carry — E epochs of search + update + index refresh with zero host
     round-trips of index-plane data.
 
-    ``mesh``/``axis``/``plane_search`` thread straight into
-    :func:`run_epoch` (DESIGN.md §5.5): with a mesh and a
-    ``shard_index_plane``-laid-out plane, every epoch's refresh runs
-    width-sharded and (with ``plane_search``) the membership answers
-    come from the sharded tiered search — the serving loop never
-    materializes a replicated ``[L, W]`` rectangle, which is what lets
-    the plane outgrow one device's memory *in serving*, not just during
-    refresh.
+    ``mesh``/``axis``/``plane_search``/``split``/``route_capacity``/
+    ``route_slack`` thread straight into :func:`run_epoch` (DESIGN.md
+    §5.5–§5.6): with a mesh and a ``shard_index_plane``-laid-out
+    plane, every epoch's refresh runs width-sharded and (with
+    ``plane_search``) the membership answers come from the *routed*
+    sharded search — the serving loop never materializes a replicated
+    ``[L, W]`` rectangle, which is what lets the plane outgrow one
+    device's memory *in serving*, not just during refresh.  With
+    ``split="mass"`` every incremental refresh re-splits the shard
+    boundaries at the hit-counter mass quantiles, so the exchange's
+    occupancy tracks the workload as it drifts (a rebuild-recovery
+    epoch emits the packed layout; the next refresh re-splits).
 
     Overflow state machine (DESIGN.md §5.4): an epoch whose refresh
     reports nonzero overflow arms a pending flag, and the *next*
@@ -805,30 +880,49 @@ def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
     width) arms it too — but edge-triggered, once per crossing, so
     steady-state serving at high occupancy keeps the cheap incremental
     refresh instead of paying a full rebuild every epoch.  Returns
-    ``(state, plane, results[E, B], path_len[E, B], overflow[E])``;
-    ``overflow[e] > 0`` flags the stale epochs (staleness lasts one
-    epoch; persistent nonzero overflow means the alive count exceeds
-    the plane width — rebuild wider at the host level)."""
+    ``(state, plane, results[E, B], path_len[E, B], overflow[E],
+    spill[E])``; ``overflow[e] > 0`` flags the stale epochs (staleness
+    lasts one epoch; persistent nonzero overflow means the alive count
+    exceeds the plane width — rebuild wider at the host level) and
+    ``spill[e]`` counts the routed-exchange spills per epoch
+    (persistently nonzero spill under ``split="lanes"`` is the signal
+    to switch to ``"mass"`` or raise ``route_capacity``)."""
     width = plane.keys.shape[1]
     B = keys.shape[1]
 
     def step(carry, ep):
         s, pl, pending, pressed = carry
         kd, ks, up = ep
-        s, pl, res, plen, ovf = run_epoch(s, pl, kd, ks, up,
-                                          aggregate=aggregate,
-                                          max_new=max_new,
-                                          rebuild=pending,
-                                          mesh=mesh, axis=axis,
-                                          plane_search=plane_search)
+        s, pl, res, plen, ovf, spl = _run_epoch(
+            s, pl, kd, ks, up, aggregate=aggregate, max_new=max_new,
+            rebuild=pending, mesh=mesh, axis=axis,
+            plane_search=plane_search, split=split,
+            route_capacity=route_capacity, route_slack=route_slack)
         pressure = s.size + B > width
         pending = (ovf > 0) | (pressure & ~pressed)
-        return (s, pl, pending, pressure), (res, plen, ovf)
+        return (s, pl, pending, pressure), (res, plen, ovf, spl)
 
-    (st, plane, _, _), (res, plen, ovf) = jax.lax.scan(
+    (st, plane, _, _), (res, plen, ovf, spl) = jax.lax.scan(
         step, (st, plane, jnp.asarray(False), jnp.asarray(False)),
         (kinds, keys, upd_mask))
-    return st, plane, res, plen, ovf
+    return st, plane, res, plen, ovf, spl
+
+
+def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
+                aggregate: bool = False, max_new: int = None,
+                mesh=None, axis: str = "model",
+                plane_search: bool = False, split: str = "lanes",
+                route_capacity: int = None, route_slack: float = None):
+    _check_plane_dispatch(plane, mesh, axis, split)
+    return _run_serving(st, plane, kinds, keys, upd_mask,
+                        aggregate=aggregate, max_new=max_new,
+                        mesh=mesh, axis=axis,
+                        plane_search=plane_search, split=split,
+                        route_capacity=route_capacity,
+                        route_slack=route_slack)
+
+
+run_serving.__doc__ = _run_serving.__doc__
 
 
 # ---------------------------------------------------------------------------

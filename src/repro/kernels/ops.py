@@ -33,14 +33,21 @@ def splay_search(level_keys, queries, query_block: int = 256,
 
 
 def splay_search_sharded(plane, queries, query_block: int = 256,
-                         mesh=None, axis: str = "model"):
-    """Width-sharded tiered search: the descent under ``shard_map`` with
-    query blocks routed to the shard owning their bottom-row rank window
-    (see kernels/splay_search.py, DESIGN.md §5.5).  Falls back to the
-    replicated path when no mesh resolves or the width is indivisible."""
+                         mesh=None, axis: str = "model",
+                         routed: bool = True, capacity: int = None,
+                         slack: float = ssk.DEFAULT_ROUTE_SLACK,
+                         return_stats: bool = False):
+    """Width-sharded tiered search: by default the routed all_to_all
+    query exchange — owner-bucketed blocks shipped to the shard owning
+    their bottom-row rank window, O(q/S) kernel work per shard, spill
+    to the replicate-and-mask trace past ``capacity`` (see
+    kernels/splay_search.py, DESIGN.md §5.6; ``routed=False`` keeps the
+    masked full-batch trace).  Falls back to the replicated path when
+    no mesh resolves or the width is indivisible."""
     return ssk.splay_search_sharded(
         plane, queries, query_block=query_block,
-        interpret=not on_tpu(), mesh=mesh, axis=axis)
+        interpret=not on_tpu(), mesh=mesh, axis=axis, routed=routed,
+        capacity=capacity, slack=slack, return_stats=return_stats)
 
 
 def splay_search_full(level_keys, queries, query_block: int = 256):

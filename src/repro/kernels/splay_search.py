@@ -38,22 +38,30 @@ which case the struct's precomputed rank map and row widths ride along
 (both the host build and the device build/refresh emit them); the
 ``rank_windows`` jnp fallback below serves bare-matrix callers only.
 
-Sharding (DESIGN.md §5.5): a plane laid out width-sharded by
+Sharding (DESIGN.md §5.5–§5.6): a plane laid out width-sharded by
 ``parallel.sharding.shard_index_plane`` executes the search *sharded* —
 ``splay_search_sharded`` runs the tiered descent under ``shard_map``
-over the ``splay_width`` axis, with query blocks routed to the shard
-owning their bottom-row rank window by a sharded ``searchsorted`` over
-the per-shard boundary keys (the §5.4 range-boundary table) and each
-shard descending its own key-range segment; one stacked ``psum``
-composes the outputs.  ``splay_search`` dispatches there automatically
-for a concretely width-sharded plane; gather-to-replicated remains the
-documented fallback (no mesh, one shard, indivisible width, or
-``sharded=False``) and is all ``splay_search_full`` ever does.
+over the ``splay_width`` axis.  The default execution is the *routed
+query exchange* (§5.6): the query batch enters batch-sharded, each
+shard owner-buckets its slice by a sharded ``searchsorted`` over the
+per-shard boundary keys (the §5.4 range-boundary table), one
+``all_to_all`` ships each static-capacity bucket to its owner, the
+owner runs the unmodified tiered kernel over only its O(q/S) received
+block on its local ``[L, W/S]`` sub-plane, and the inverse
+``all_to_all`` + a positional unpermute return the answers — per-shard
+compute O((q/S)·L·log(W/S)).  Queries past a shard's capacity *spill*
+to the replicate-and-mask trace (the PR-4 path, kept as
+``routed=False``): counted, never dropped, bit-identical either way.
+``splay_search`` dispatches here automatically for a concretely
+width-sharded plane; gather-to-replicated remains the documented
+fallback (no mesh, one shard, indivisible width, or ``sharded=False``)
+and is all ``splay_search_full`` ever does.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +74,24 @@ from repro.parallel import sharding as shd
 PAD_KEY = 2 ** 31 - 1
 NEG_INF_KEY = -(2 ** 31) + 1        # splaylist.NEG_INF_32 (head sentinel)
 DEFAULT_QUERY_BLOCK = 256
+DEFAULT_ROUTE_SLACK = 1.5
+
+
+class RouteStats(NamedTuple):
+    """Routing balance of one routed-exchange batch (DESIGN.md §5.6).
+
+    ``spill`` (int32 scalar, replicated): queries answered through the
+    replicate-and-mask spill path this batch — their owner's received
+    block exceeded the static ``capacity`` (or their source bucket
+    did).  ``occupancy`` (int32 ``[S]``, replicated): live queries
+    received per shard after the exchange, *before* the capacity clamp
+    — ``occupancy[s] > capacity`` is exactly the spill condition, and
+    ``occupancy.sum() == q`` (every real query has one owner;
+    batch-padding fill lanes are excluded from the exchange).  On
+    the no-mesh replicated fallback ``spill`` is 0 and ``occupancy`` is
+    the single pseudo-shard's whole batch."""
+    spill: jax.Array
+    occupancy: jax.Array
 
 
 def _is_concrete(x) -> bool:
@@ -84,6 +110,27 @@ def _replicated(x):
         return x
     return jax.device_put(
         x, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()))
+
+
+def _reject_segmented(level_keys):
+    """Refuse a segmented (§5.6 mass-split) plane on the
+    gather-to-replicated path: its bottom row has interior +INF runs at
+    segment boundaries, which violates the sorted-row invariant of the
+    single-device binary descent — the answers would be silently wrong,
+    not slower.  Concrete arrays only (one bottom-row host pull on the
+    already-slow gather path); tracers pass — inside jit the caller
+    owns layout discipline, and the sharded entry points (which handle
+    segmented planes exactly) are the documented route there."""
+    if not _is_concrete(level_keys):
+        return
+    import numpy as np
+    live = np.asarray(level_keys[-1]) != PAD_KEY
+    if live.any() and not live[:int(np.nonzero(live)[0][-1]) + 1].all():
+        raise ValueError(
+            "segmented (mass-split) plane on the gather-to-replicated "
+            "search path: interior pad runs break the packed sorted-row "
+            "invariant — search it with splay_search_sharded (routed or "
+            "masked), or refresh it with split='lanes' to repack first")
 
 
 def rank_windows(level_keys):
@@ -208,6 +255,7 @@ def splay_search(level_keys, queries, query_block: int =
                                         query_block=query_block,
                                         interpret=interpret)
         level_keys = _replicated(jnp.asarray(plane.keys))
+        _reject_segmented(level_keys)
         if rank_map is None:
             rank_map = _replicated(jnp.asarray(plane.rank_map))
         if widths is None:
@@ -278,25 +326,94 @@ def _splay_search_arrays(level_keys, queries, query_block: int =
 
 
 # ---------------------------------------------------------------------------
-# width-sharded execution (DESIGN.md §5.5): ownership routing + per-shard
-# tiered descent on locally-assembled sub-planes
+# width-sharded execution (DESIGN.md §5.5–§5.6): ownership routing +
+# per-shard tiered descent on locally-assembled sub-planes.  Default is
+# the routed all_to_all query exchange; the replicate-and-mask trace is
+# kept as the spill target and as `routed=False`.
 # ---------------------------------------------------------------------------
+
+def _route_tables(bot, axis: str):
+    """(boundary table [S], rank lifts [S]) from ONE two-scalar
+    ``all_gather`` per shard block.
+
+    Boundary table: shard s's entry is the smallest bottom-row key at
+    or right of block s (suffix-min of block-first keys), with shard 0
+    forced to the −∞ sentinel so every query has exactly one owner —
+    the §5.4 range-boundary table.  The suffix-min matters for
+    *segmented* planes (the §5.6 mass-weighted split can leave an
+    interior block empty — its raw first key is the +INF pad, which
+    would break the ownership searchsorted's monotonicity); on packed
+    planes only trailing blocks can be empty and the suffix-min is the
+    identity, so the table — and the routing — is bit-identical to the
+    PR-4 one.
+
+    Rank lifts: the exclusive prefix of per-block live-lane counts —
+    the lift from a shard's local predecessor index to the *packed
+    global* one.  On a packed plane every block left of an owned
+    query's shard is full, so the lift equals the PR-4 ``ax * wl``
+    column offset exactly; on a segmented plane the blocks hold the
+    packed ranks ``[b_s, b_{s+1})``, so the lift is the left-segment
+    length sum either way."""
+    ax = jax.lax.axis_index(axis).astype(jnp.int32)
+    lo = jnp.where(ax == 0, jnp.int32(NEG_INF_KEY), bot[0])
+    cnt = jnp.sum((bot != PAD_KEY).astype(jnp.int32))
+    both = jax.lax.all_gather(jnp.stack([lo, cnt]), axis)  # [S, 2]
+    counts = both[:, 1]
+    return shd.suffix_min_bounds(both[:, 0]), jnp.cumsum(counts) - counts
+
+
+def _owner_of(bounds, queries):
+    """Owner shard of each query: the unique s with
+    ``bounds[s] <= clip(q) < bounds[s+1]``.  Queries clamp into
+    (−∞ sentinel, +INF pad sentinel) for routing only: an all-pad
+    block's boundary key IS the pad sentinel, so a q == PAD_KEY query
+    must route to the last live range (whose window-bounded descent
+    answers it like the replicated kernel, which never probes pad
+    lanes), and a q below shard 0's −∞ sentinel must still route to
+    shard 0 (whose descent answers rank −1 / not-found exactly like
+    the replicated kernel)."""
+    return (jnp.searchsorted(bounds,
+                             jnp.clip(queries, NEG_INF_KEY, PAD_KEY - 1),
+                             side="right")
+            .astype(jnp.int32) - 1)                    # in [0, S-1]
+
+
+def _masked_descent(local, bounds, lift, queries, *, axis: str,
+                    query_block: int, interpret: bool):
+    """The replicate-and-mask trace (the PR-4 §5.5 execution, now the
+    spill target): every shard descends the FULL (replicated) query
+    batch on its local sub-plane, masks the lanes it does not own, and
+    ONE stacked ``[3, q]`` psum composes the outputs.  Aggregate
+    compute is S× redundant — which is exactly why §5.6 routes instead
+    — but any query answers correctly here, capacity-free."""
+    owner = _owner_of(bounds, queries)
+    mine = owner == jax.lax.axis_index(axis).astype(jnp.int32)
+    f, r, lv = _splay_search_arrays(
+        local.keys, queries, query_block=query_block,
+        interpret=interpret, rank_map=local.rank_map,
+        widths=local.widths)
+    rank_g = jnp.where(r >= 0, r + lift, -1)
+    stacked = jnp.where(mine[None, :],
+                        jnp.stack([f.astype(jnp.int32), rank_g, lv]),
+                        0)
+    f_o, r_o, l_o = jax.lax.psum(stacked, axis)
+    return f_o > 0, r_o, l_o
+
 
 def _search_shard_body(bot, hts, queries, *, axis: str, n_levels: int,
                        query_block: int, interpret: bool):
-    """Per-shard body of :func:`splay_search_sharded` (runs under
-    ``shard_map``; ``bot``/``hts`` are this shard's bottom-row /heights
+    """Per-shard body of the ``routed=False`` path (runs under
+    ``shard_map``; ``bot``/``hts`` are this shard's bottom-row/heights
     blocks, queries are replicated).  Three stages:
 
-      1. *routing* — the §5.4 range-boundary table (scalar
-         ``all_gather`` of block-first bottom-row keys; shard 0's entry
-         is the −∞ sentinel so every query has exactly one owner) and
-         one sharded ``searchsorted`` assign each query the shard whose
-         contiguous key range contains it.  Ownership by bottom-row key
-         range means the owner's columns contain the query's bottom-row
-         rank window — including windows that straddle a shard boundary
-         on the *global* plane: the halo-established range bound closes
-         them against the local −∞/+∞ sentinels instead (the true
+      1. *routing* — the §5.4 range-boundary table
+         (:func:`_route_tables`) and one sharded ``searchsorted``
+         assign each query the shard whose contiguous key range
+         contains it.  Ownership by bottom-row key range means the
+         owner's columns contain the query's bottom-row rank window —
+         including windows that straddle a shard boundary on the
+         *global* plane: the halo-established range bound closes them
+         against the local −∞/+∞ sentinels instead (the true
          predecessor left of the boundary, when there is one, is by
          construction not the bottom-row answer of an owned query).
       2. *local descent* — the shard re-layers its own (bottom block,
@@ -306,57 +423,178 @@ def _search_shard_body(bot, hts, queries, *, axis: str, n_levels: int,
          ``level_found`` — matches the global plane exactly) and runs
          the unmodified tiered kernel on it.  O((L·W/S)·log W) assembly
          amortized over the query batch; resident footprint O(L·W/S).
-      3. *composition* — local ranks lift to global by the shard's
-         column offset, and ONE stacked ``[3, q]`` ``psum`` (masked to
-         each query's owner) emits found/rank/level.
+      3. *composition* — local ranks lift to packed-global by the
+         shard's live-lane prefix (:func:`_route_tables`), and ONE
+         stacked ``[3, q]`` ``psum`` (masked to each query's owner)
+         emits found/rank/level.
 
-    Wire per batch: one scalar all_gather + one [3, q] psum —
+    Wire per batch: two scalar all_gathers + one [3, q] psum —
     independent of W (the refresh's collectives are O(W); the search
     adds only O(q))."""
     from repro.core import device_index as dix
     wl = bot.shape[0]
-    ax = jax.lax.axis_index(axis).astype(jnp.int32)
-
-    # ---- 1. routing: range-boundary table + sharded searchsorted.
-    # Queries clamp into (−∞ sentinel, +INF pad sentinel) for routing
-    # only: an all-pad block's boundary key IS the pad sentinel, so a
-    # q == PAD_KEY query must route to the last live range (whose
-    # window-bounded descent answers it like the replicated kernel,
-    # which never probes pad lanes), and a q below shard 0's −∞
-    # sentinel must still route to shard 0 (whose descent answers
-    # rank −1 / not-found exactly like the replicated kernel).
-    lo = jnp.where(ax == 0, jnp.int32(NEG_INF_KEY), bot[0])
-    bounds = jax.lax.all_gather(lo, axis)              # [S] boundary keys
-    owner = (jnp.searchsorted(bounds,
-                              jnp.clip(queries, NEG_INF_KEY,
-                                       PAD_KEY - 1),
-                              side="right")
-             .astype(jnp.int32) - 1)                   # in [0, S-1]
-    mine = owner == ax
-
-    # ---- 2. the tiered rank-windowed descent on the local sub-plane
+    bounds, lifts = _route_tables(bot, axis)
+    lift = lifts[jax.lax.axis_index(axis).astype(jnp.int32)]
     local = dix._assemble_device(
         bot, hts, jnp.full((wl,), -1, jnp.int32), n_levels)
-    f, r, lv = _splay_search_arrays(
-        local.keys, queries, query_block=query_block,
-        interpret=interpret, rank_map=local.rank_map,
-        widths=local.widths)
+    return _masked_descent(local, bounds, lift, queries, axis=axis,
+                           query_block=query_block, interpret=interpret)
 
-    # ---- 3. composition: owner-masked stacked psum
-    rank_g = jnp.where(r >= 0, r + ax * wl, -1)
-    stacked = jnp.where(mine[None, :],
-                        jnp.stack([f.astype(jnp.int32), rank_g, lv]),
-                        0)
-    f_o, r_o, l_o = jax.lax.psum(stacked, axis)
-    return f_o > 0, r_o, l_o
+
+def _routed_shard_body(bot, hts, q_loc, *, axis: str, n_shards: int,
+                       n_levels: int, capacity: int, query_block: int,
+                       interpret: bool, n_live: int):
+    """Per-shard body of the routed query exchange (DESIGN.md §5.6;
+    runs under ``shard_map``; ``bot``/``hts`` are this shard's blocks,
+    ``q_loc`` is its ``[q/S]`` slice of the batch-sharded queries).
+
+      1. *bucket* — route the local slice by the boundary table, then
+         compact each destination's queries into one lane-contiguous
+         bucket of the static ``[S, capacity]`` send block (gather-only:
+         per-destination prefix sums + one inverse-prefix take).  A
+         bucket position past ``capacity`` marks the query spilled at
+         the source (only possible when ``capacity < q/S``).
+      2. *exchange* — ONE ``all_to_all`` of the send block (the [S, S]
+         per-pair counts ride a scalar ``all_gather``); shard s
+         receives row j = shard j's bucket for s.  Received buckets
+         compact source-major into the kernel batch ``[capacity]``;
+         received queries whose compacted rank lands past ``capacity``
+         spill at the destination.
+      3. *descend* — the unmodified tiered kernel over the O(q/S)
+         compacted block on the locally re-layered [L, W/S] sub-plane
+         (same sub-plane as the masked trace — answers are identical).
+      4. *return* — answers (plus a validity flag) scatter-free back
+         into the ``[S, capacity]`` recv layout by the same positional
+         arithmetic, the inverse ``all_to_all`` ships them home, and
+         each source unpermutes by its (owner, bucket position) pairs.
+      5. *spill* — queries without a valid routed answer (source- or
+         destination-side capacity overflow) are answered by the
+         replicate-and-mask trace (:func:`_masked_descent` over the
+         all_gathered batch), entered only when the psum'd spill count
+         is nonzero: counted, never dropped, bit-identical either way.
+
+    Wire per batch: two all_to_alls of [S·capacity] + O(S²) scalars —
+    O(q·slack), W-independent; the full-batch all_gather is paid only
+    on spill epochs.  Per-shard kernel compute drops from O(q·L·log
+    (W/S)) to O((q/S)·slack·L·log(W/S)) — the §5.6 point."""
+    from repro.core import device_index as dix
+    S = n_shards
+    wl = bot.shape[0]
+    qs = q_loc.shape[0]
+    ax = jax.lax.axis_index(axis).astype(jnp.int32)
+    fill = jnp.int32(PAD_KEY - 1)                      # inert query value
+
+    bounds, lifts = _route_tables(bot, axis)
+    lift = lifts[ax]
+    local = dix._assemble_device(
+        bot, hts, jnp.full((wl,), -1, jnp.int32), n_levels)
+
+    # ---- 1. owner-bucket the local slice.  Batch-padding fill lanes
+    # (global index >= n_live, appended by the wrapper when q % S != 0)
+    # get owner -1: never bucketed, never exchanged, never counted in
+    # the pair-count matrix — so occupancy and spill reflect real
+    # queries only, and pads can't push a shard over capacity.
+    gidx = ax * qs + jnp.arange(qs, dtype=jnp.int32)
+    owner = jnp.where(gidx < n_live, _owner_of(bounds, q_loc),
+                      jnp.int32(-1))                   # [qs]
+    onehot = (owner[:, None]
+              == jnp.arange(S, dtype=jnp.int32)[None, :])
+    cs = jnp.cumsum(onehot.astype(jnp.int32), axis=0)  # [qs, S]
+    cnt = cs[qs - 1]                                   # [S] per-dest count
+    pos = jnp.take_along_axis(cs, owner[:, None].astype(jnp.int32),
+                              axis=1)[:, 0] - 1        # bucket position
+    lane = jnp.arange(capacity, dtype=jnp.int32)
+
+    def bucket(cs_d):
+        # inverse prefix sum: lane c of dest d's bucket holds the c-th
+        # owned query (same gather formulation as _compact_take)
+        take = jnp.minimum(
+            jnp.searchsorted(cs_d, lane + 1).astype(jnp.int32), qs - 1)
+        return jnp.take(q_loc, take)
+
+    send = jnp.where(lane[None, :] < jnp.minimum(cnt, capacity)[:, None],
+                     jax.vmap(bucket)(jnp.transpose(cs)), fill)
+
+    # ---- 2. exchange + destination-side compaction -----------------------
+    recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                              tiled=True)              # [S, cap] by src
+    pair_cnt = jax.lax.all_gather(cnt, axis)           # [S_src, S_dst]
+    rcv_cnt = jnp.minimum(pair_cnt[:, ax], capacity)   # [S] live per row
+    cum_r = jnp.cumsum(rcv_cnt)
+    occ = cum_r[S - 1]                                 # my occupancy
+    src_of = jnp.searchsorted(cum_r, lane,
+                              side="right").astype(jnp.int32)
+    src_c = jnp.minimum(src_of, S - 1)
+    lane_of = lane - (jnp.take(cum_r, src_c) - jnp.take(rcv_cnt, src_c))
+    kq = jnp.where(lane < jnp.minimum(occ, capacity),
+                   recv[src_c, jnp.clip(lane_of, 0, capacity - 1)],
+                   fill)                               # [cap] kernel batch
+
+    # ---- 3. the tiered descent over the compacted O(q/S) block -----------
+    f, r, lv = _splay_search_arrays(
+        local.keys, kq, query_block=query_block, interpret=interpret,
+        rank_map=local.rank_map, widths=local.widths)
+    rank_g = jnp.where(r >= 0, r + lift, -1)
+
+    # ---- 4. positional un-exchange ---------------------------------------
+    off_r = cum_r - rcv_cnt                            # [S] excl offsets
+    gpos = off_r[:, None] + lane[None, :]              # [S, cap]
+    live_r = lane[None, :] < rcv_cnt[:, None]
+    valid = live_r & (gpos < capacity)
+    gp = jnp.clip(gpos, 0, capacity - 1)
+    back = jnp.stack([jnp.take(f.astype(jnp.int32), gp),
+                      jnp.take(rank_g, gp), jnp.take(lv, gp),
+                      valid.astype(jnp.int32)])        # [4, S, cap]
+    home = jax.lax.all_to_all(back, axis, split_axis=1, concat_axis=1,
+                              tiled=True)              # [4, S, cap] by dst
+    idx = (jnp.clip(owner, 0, S - 1) * capacity
+           + jnp.minimum(jnp.maximum(pos, 0), capacity - 1))
+    flat = home.reshape(4, S * capacity)
+    # pad lanes (owner -1) read a garbage-but-in-bounds slot; their ok
+    # value is irrelevant (the wrapper slices them off) and they are
+    # excluded from the pair-count-derived spill/occupancy below
+    ok = (pos < capacity) & (jnp.take(flat[3], idx) > 0)
+    f_rt = jnp.take(flat[0], idx) > 0
+    r_rt = jnp.take(flat[1], idx)
+    l_rt = jnp.take(flat[2], idx)
+
+    # ---- 5. spill: replicate-and-mask trace, entered only when
+    # needed.  The spill count and occupancy both derive from the
+    # replicated [S, S] pair-count matrix — no further collective:
+    # source-side truncation is pair_cnt past capacity, destination-
+    # side overflow is the received-live total past capacity, and the
+    # two partition ~ok exactly.
+    occupancy = jnp.sum(pair_cnt, axis=0)              # [S] per dest
+    clamped = jnp.minimum(pair_cnt, capacity)
+    n_spill = (jnp.sum(pair_cnt - clamped)
+               + jnp.sum(jnp.maximum(
+                   jnp.sum(clamped, axis=0) - capacity, 0))
+               ).astype(jnp.int32)
+
+    def spill_path(_):
+        q_all = jax.lax.all_gather(q_loc, axis, tiled=True)  # [S*qs]
+        fa, ra, la = _masked_descent(
+            local, bounds, lift, q_all, axis=axis,
+            query_block=query_block, interpret=interpret)
+        sl = lambda x: jax.lax.dynamic_slice(x, (ax * qs,), (qs,))
+        return sl(fa), sl(ra), sl(la)
+
+    def no_spill(_):
+        return (jnp.zeros((qs,), jnp.bool_), jnp.zeros((qs,), jnp.int32),
+                jnp.zeros((qs,), jnp.int32))
+
+    f_sp, r_sp, l_sp = jax.lax.cond(n_spill > 0, spill_path, no_spill,
+                                    operand=None)
+    return (jnp.where(ok, f_rt, f_sp), jnp.where(ok, r_rt, r_sp),
+            jnp.where(ok, l_rt, l_sp), n_spill, occupancy)
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_search_fn(mesh, axis: str, n_levels: int, query_block: int,
                        interpret: bool):
-    """Build (and cache) the jitted shard_map for one (mesh, axis,
-    n_levels, query_block) cell — planes are shape-stable, so serving
-    reuses one entry per mesh."""
+    """Build (and cache) the jitted shard_map of the replicate-and-mask
+    path for one (mesh, axis, n_levels, query_block) cell — planes are
+    shape-stable, so serving reuses one entry per mesh."""
     body = functools.partial(
         _search_shard_body, axis=axis, n_levels=n_levels,
         query_block=query_block, interpret=interpret)
@@ -366,39 +604,89 @@ def _sharded_search_fn(mesh, axis: str, n_levels: int, query_block: int,
     return jax.jit(fn)
 
 
+@functools.lru_cache(maxsize=None)
+def _routed_search_fn(mesh, axis: str, n_levels: int, query_block: int,
+                      interpret: bool, capacity: int, n_live: int):
+    """Build (and cache) the jitted shard_map of the routed exchange for
+    one (mesh, axis, n_levels, query_block, capacity, n_live) cell.
+    Queries enter batch-sharded (``P(axis)``) and the answer triple
+    leaves batch-sharded; the spill count and occupancy vector are
+    replicated."""
+    body = functools.partial(
+        _routed_shard_body, axis=axis, n_shards=mesh.shape[axis],
+        n_levels=n_levels, capacity=capacity, query_block=query_block,
+        interpret=interpret, n_live=n_live)
+    fn = shd.shard_map_compat(
+        body, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(), P()))
+    return jax.jit(fn)
+
+
+def route_capacity(nq: int, n_shards: int,
+                   slack: float = DEFAULT_ROUTE_SLACK) -> int:
+    """The default static per-shard receive capacity of the routed
+    exchange: ``ceil(q/S) · slack``, clamped into ``[1, q_padded]``
+    (DESIGN.md §5.6).  ``slack`` absorbs routing imbalance — under the
+    mass-weighted split (§5.6) occupancy concentrates near q/S, so the
+    default 1.5 leaves spill a rare event rather than a safety
+    requirement (spilled queries still answer exactly, just slower)."""
+    qs = -(-nq // n_shards)
+    q_p = qs * n_shards
+    return max(1, min(q_p, int(-(-qs * slack // 1))))
+
+
 def splay_search_sharded(level_keys, queries, query_block: int =
                          DEFAULT_QUERY_BLOCK, interpret: bool = True,
-                         mesh=None, axis: str = "model"):
-    """Width-sharded tiered search (DESIGN.md §5.5): the rank-windowed
-    descent under ``shard_map`` over the ``splay_width`` axis.  Each
-    shard owns the contiguous key range of its plane segment (its
-    ``W/S`` columns of the sorted bottom row — the same ownership as
-    the §5.4 sharded refresh); query blocks route to their owner via a
-    sharded ``searchsorted`` over the per-shard boundary keys, the
-    owner runs the tiered kernel on its locally re-layered sub-plane,
-    and one stacked ``psum`` composes the outputs.  No replicated
-    ``[L, W]`` rectangle is ever materialized — per-shard residency is
-    O(L·W/S) and the per-batch wire is O(q), which is what lets
-    *serving* (not just refresh) outgrow one device's memory.
+                         mesh=None, axis: str = "model",
+                         routed: bool = True, capacity: int = None,
+                         slack: float = DEFAULT_ROUTE_SLACK,
+                         return_stats: bool = False):
+    """Width-sharded tiered search (DESIGN.md §5.5–§5.6): the
+    rank-windowed descent under ``shard_map`` over the ``splay_width``
+    axis.  Each shard owns the contiguous key range of its plane
+    segment (the same ownership as the §5.4 sharded refresh); by
+    default (``routed=True``) the query batch is *exchanged*: each
+    shard owner-buckets its batch slice, ONE ``all_to_all`` ships the
+    static-capacity buckets, the owner runs the tiered kernel over only
+    its O(q/S) received block on its locally re-layered sub-plane, and
+    the inverse exchange + positional unpermute return the answers —
+    per-shard compute O((q/S)·L·log(W/S)).  ``routed=False`` keeps the
+    replicate-and-mask trace (every shard descends the full batch and
+    masks; per-shard compute O(q·L·log(W/S))), which is also where
+    queries *spill* when a shard's received block exceeds ``capacity``
+    — counted, never dropped, bit-identical either way.  No replicated
+    ``[L, W]`` rectangle is ever materialized on either path.
+
+    ``capacity`` (static) is the per-shard receive block size; default
+    :func:`route_capacity` = ``ceil(q/S) · slack``.  ``slack`` is the
+    imbalance headroom (only read when ``capacity`` is None).
+    ``return_stats=True`` appends a :class:`RouteStats` (spill count,
+    per-shard occupancy) to the returned triple.
 
     ``level_keys`` must be an index plane struct
     (``DeviceLevelArrays``/``LevelArrays``).  Mesh resolution: the
     ``mesh`` argument, else the plane's own concrete layout
     (``sharding.plane_width_mesh``), else the active
-    ``sharding.use_mesh``.  Queries enter replicated over the mesh and
-    the outputs are replicated — same values on every device.
+    ``sharding.use_mesh``.  Outputs are the global answer triple (the
+    routed path leaves them batch-sharded over the mesh; the masked
+    path replicates them — same values either way).
 
     Equivalence: bit-identical to the replicated tiered search (and to
     ``splay_search_full``) on every plane and query batch — membership,
     bottom-row predecessor rank, and first-row-found are functions of
     (plane, query) alone, and the per-shard sub-plane preserves row
     membership exactly (asserted on 1/2/4-way host meshes in
-    ``tests/test_sharded_search.py``, boundary-straddling windows and
-    transient-empty rows included).
+    ``tests/test_sharded_search.py``, boundary-straddling windows,
+    forced spill, and mass-split planes included).  On a segmented
+    (§5.6 mass-split) plane this sharded entry point is the ONLY
+    correct search — the gather-to-replicated path assumes a packed
+    bottom row.
 
     Fallback modes (never raises): no resolvable mesh, ``axis`` absent
     from the mesh, or ``width % S != 0`` all route to the replicated
-    gather-to-replicated path with the same return convention."""
+    gather-to-replicated path with the same return convention (stats:
+    zero spill, one pseudo-shard owning the whole batch)."""
     plane = level_keys
     if not hasattr(plane, "rank_map"):
         raise TypeError("splay_search_sharded takes an index plane "
@@ -407,17 +695,50 @@ def splay_search_sharded(level_keys, queries, query_block: int =
     if mesh is None:
         mesh = shd.plane_width_mesh(plane, axis) or shd.active_mesh()
     n_levels, width = plane.keys.shape
+    nq = jnp.asarray(queries).shape[0]
     if (mesh is None or axis not in mesh.shape
             or width % mesh.shape[axis]):
-        return splay_search(plane, queries, query_block=query_block,
-                            interpret=interpret, sharded=False)
+        out = splay_search(plane, queries, query_block=query_block,
+                           interpret=interpret, sharded=False)
+        if return_stats:
+            return out + (RouteStats(
+                jnp.zeros((), jnp.int32),
+                jnp.full((1,), nq, jnp.int32)),)
+        return out
+    S = mesh.shape[axis]
     queries = jnp.asarray(queries)
-    if queries.shape[0] == 0:
+    if nq == 0:
         z = jnp.zeros((0,), jnp.int32)
-        return jnp.zeros((0,), jnp.bool_), z, z
-    fn = _sharded_search_fn(mesh, axis, n_levels, query_block, interpret)
+        out = (jnp.zeros((0,), jnp.bool_), z, z)
+        if return_stats:
+            return out + (RouteStats(jnp.zeros((), jnp.int32),
+                                     jnp.zeros((S,), jnp.int32)),)
+        return out
     bot = jnp.asarray(plane.keys)[n_levels - 1]
-    return fn(bot, jnp.asarray(plane.heights), queries)
+    hts = jnp.asarray(plane.heights)
+    if not routed:
+        fn = _sharded_search_fn(mesh, axis, n_levels, query_block,
+                                interpret)
+        out = fn(bot, hts, queries)
+        if return_stats:
+            return out + (RouteStats(
+                jnp.zeros((), jnp.int32),
+                jnp.full((S,), nq, jnp.int32)),)
+        return out
+    qs = -(-nq // S)
+    pad = qs * S - nq
+    if capacity is None:
+        capacity = route_capacity(nq, S, slack)
+    if pad:
+        queries = jnp.pad(queries, (0, pad),
+                          constant_values=PAD_KEY - 1)
+    fn = _routed_search_fn(mesh, axis, n_levels, query_block, interpret,
+                           int(capacity), int(nq))
+    f, r, lv, spill, occ = fn(bot, hts, queries)
+    out = (f[:nq], r[:nq], lv[:nq])
+    if return_stats:
+        return out + (RouteStats(spill, occ),)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -480,6 +801,7 @@ def splay_search_full(level_keys, queries, query_block: int =
     baseline stays a single-device measurement)."""
     if hasattr(level_keys, "rank_map"):        # index plane struct
         level_keys = _replicated(jnp.asarray(level_keys.keys))
+        _reject_segmented(level_keys)
     queries = shd.constrain(jnp.asarray(queries), "batch")
     return _splay_search_full_arrays(level_keys, queries,
                                      query_block=query_block,

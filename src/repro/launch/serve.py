@@ -8,10 +8,11 @@ device-resident index plane, run jitted serving epochs
 (``splaylist.run_serving`` — op batches + incremental plane refresh with
 the overflow/rebuild state machine), and, when the runtime exposes
 multiple devices (e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``),
-run the serving loop sharded end-to-end over the model axis — sharded
-plane search answering the batches plus sharded refresh (DESIGN.md
-§5.5) — and verify every piece bit-identical against the replicated
-loop.
+run the serving loop sharded end-to-end over the model axis — the
+*routed* sharded plane search (all_to_all query exchange) answering
+the batches plus sharded refresh, under both the equal-lane and the
+mass-weighted boundary splits (DESIGN.md §5.5–§5.6) — and verify every
+piece bit-identical against the replicated loop.
 """
 
 from __future__ import annotations
@@ -54,7 +55,7 @@ def splay_demo(args) -> dict:
                     rng.integers(0, 4000, (E, B))).astype(np.int32)
     ups = rng.random((E, B)) < 0.5
 
-    st2, plane2, res, plen, ovf = sx.run_serving(
+    st2, plane2, res, plen, ovf, _ = sx.run_serving(
         st, plane, jnp.asarray(kinds), jnp.asarray(keys),
         jnp.asarray(ups))
     out = {
@@ -75,14 +76,15 @@ def splay_demo(args) -> dict:
         mesh = jax.make_mesh((1, n_dev), ("data", "model"))
         plane_s = shd.shard_index_plane(plane, mesh)
 
-        # end-to-end sharded serving (DESIGN.md §5.5): contains-only
-        # aggregate epochs answered from the *sharded* plane search,
-        # refreshed by the *sharded* refresh — vs the replicated loop
+        # end-to-end sharded serving (DESIGN.md §5.5–§5.6):
+        # contains-only aggregate epochs answered from the *routed*
+        # sharded plane search (all_to_all query exchange), refreshed
+        # by the *sharded* refresh — vs the replicated loop
         ck = np.zeros_like(kinds)
-        st_r, pl_r, res_r, plen_r, _ = sx.run_serving(
+        st_r, pl_r, res_r, plen_r, _, _ = sx.run_serving(
             st, plane, jnp.asarray(ck), jnp.asarray(keys),
             jnp.asarray(ups), aggregate=True, plane_search=True)
-        st_s, pl_s, res_s, plen_s, _ = sx.run_serving(
+        st_s, pl_s, res_s, plen_s, _, spill_s = sx.run_serving(
             st, plane_s, jnp.asarray(ck), jnp.asarray(keys),
             jnp.asarray(ups), aggregate=True, plane_search=True,
             mesh=mesh)
@@ -92,6 +94,18 @@ def splay_demo(args) -> dict:
             and all((np.asarray(getattr(pl_s, f))
                      == np.asarray(getattr(pl_r, f))).all()
                     for f in ("keys", "widths", "heights", "rank_map")))
+
+        # the same loop under the mass-weighted re-split (§5.6): the
+        # plane goes segmented, so only the answers — not the layout —
+        # are compared against the replicated loop
+        st_m, _, res_m, plen_m, _, spill_m = sx.run_serving(
+            st, plane_s, jnp.asarray(ck), jnp.asarray(keys),
+            jnp.asarray(ups), aggregate=True, plane_search=True,
+            mesh=mesh, split="mass")
+        mass_match = (
+            (np.asarray(res_m) == np.asarray(res_r)).all()
+            and (np.asarray(plen_m) == np.asarray(plen_r)).all()
+            and (np.asarray(st_m.key) == np.asarray(st_r.key)).all())
 
         # the search alone, sharded vs gather-to-replicated dispatch
         qs = jnp.asarray(keys[0])
@@ -116,14 +130,20 @@ def splay_demo(args) -> dict:
         out["sharded"] = {
             "shards": n_dev,
             "serving_bit_identical": bool(serve_match),
+            "mass_split_bit_identical": bool(mass_match),
             "search_bit_identical": search_match,
             "refresh_bit_identical": bool(refresh_match),
-            "overflow": int(ov_s)}
+            "overflow": int(ov_s),
+            "routed_spill": int(np.asarray(spill_s).sum()),
+            "routed_spill_mass": int(np.asarray(spill_m).sum())}
         print(f"sharded serving on {n_dev} shards: "
               f"epochs bit_identical={serve_match}, "
+              f"mass-split bit_identical={mass_match}, "
               f"search bit_identical={search_match}, "
               f"refresh bit_identical={refresh_match}, "
-              f"overflow={int(ov_s)} (replicated {int(ov_r)})")
+              f"overflow={int(ov_s)} (replicated {int(ov_r)}), "
+              f"spill={int(np.asarray(spill_s).sum())}"
+              f"/{int(np.asarray(spill_m).sum())} (lanes/mass)")
     else:
         print(f"sharded serving skipped ({n_dev} device(s); set "
               f"XLA_FLAGS=--xla_force_host_platform_device_count=4)")

@@ -18,6 +18,8 @@ sharded refresh's and sharded search's ``shard_map`` use),
 :func:`shard_index_plane` (``device_put`` a host-built plane into the
 width-sharded layout), and :func:`plane_width_mesh` (detect that layout
 on a concrete plane — the search wrapper's dispatch seam).
+:func:`mass_split_bounds` solves the §5.6 mass-weighted shard-boundary
+placement (the access-balanced alternative to equal lane counts).
 :func:`shard_map_compat` papers over the ``check_rep``/``check_vma``
 rename so every shard_map in the repo goes through one shim.
 """
@@ -30,6 +32,7 @@ import threading
 from typing import Dict, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Rules = Dict[str, Optional[Tuple[str, ...]]]
@@ -263,6 +266,66 @@ def shard_index_plane(plane, mesh: Optional[Mesh] = None,
     return type(plane)(*(
         jax.device_put(x, NamedSharding(mesh, s))
         for x, s in zip(plane, specs)))
+
+
+def suffix_min_bounds(block_firsts: jax.Array) -> jax.Array:
+    """Monotonize per-shard block-first bottom-row keys into the
+    §5.4/§5.6 ownership boundary table: entry s becomes
+    ``min(block_firsts[s:])``, so an *empty* block's +INF first key
+    never shadows the live blocks to its right (possible on segmented
+    mass-split planes; on packed planes only trailing blocks are empty
+    and this is the identity).  The sharded refresh's key routing and
+    the sharded search's query routing both build their table through
+    this one function — the two MUST agree on every plane layout, or a
+    key refreshes into one shard while its queries route to another."""
+    return jax.lax.associative_scan(jnp.minimum, block_firsts,
+                                    reverse=True)
+
+
+def mass_split_bounds(cum_mass: jax.Array, total: jax.Array,
+                      n_shards: int, lane_cap: int) -> jax.Array:
+    """Feasible mass-balanced shard boundaries over a packed sorted row
+    (DESIGN.md §5.6): ranks ``b[0..S]`` with ``b[0] = 0``,
+    ``b[S] = total``, each segment ``[b[s], b[s+1])`` holding at most
+    ``lane_cap`` keys, and interior boundaries at the access-mass
+    quantiles ``s·M/S`` of ``cum_mass`` (the inclusive prefix sum of
+    per-key access mass over the packed row; constant past ``total``)
+    whenever the lane cap allows.
+
+    Each interior boundary is the mass quantile clamped into the
+    feasibility window ``[max(b[s-1], total − (S−s)·lane_cap),
+    min(b[s-1] + lane_cap, total)]`` — the lower bound guarantees the
+    *remaining* shards can still hold the remaining keys, the upper
+    bound caps this shard's segment, so the result is always monotone
+    and representable whenever ``total <= S · lane_cap`` (the plane's
+    own width bound).  The quantile targets are computed in exact int32
+    arithmetic (``floor(s·M/S) = s·(M//S) + (s·(M%S))//S`` avoids the
+    ``s·M`` overflow).  Pure replicated math — every shard computes the
+    same table.  With uniform mass the quantiles ARE the equal-lane
+    boundaries, so an unskewed plane re-splits to the packed layout."""
+    cum_mass = cum_mass.astype(jnp.int32)
+    total = jnp.asarray(total, jnp.int32)
+    S = int(n_shards)
+    M = cum_mass[-1]
+
+    def step(b_prev, s):
+        tgt = (M // S) * s + ((M % S) * s) // S
+        # count of keys whose inclusive prefix mass stays <= the
+        # target: the left segment reaches the quantile, the next key
+        # crosses it (side="left" would stop one key short whenever a
+        # prefix hits the target exactly — e.g. uniform mass)
+        ideal = jnp.searchsorted(cum_mass, tgt,
+                                 side="right").astype(jnp.int32)
+        lo = jnp.maximum(b_prev, total - (S - s) * lane_cap)
+        hi = jnp.minimum(b_prev + lane_cap, total)
+        b = jnp.clip(ideal, lo, hi)
+        return b, b
+
+    _, interior = jax.lax.scan(
+        step, jnp.zeros((), jnp.int32),
+        jnp.arange(1, S, dtype=jnp.int32))
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32), interior,
+                            total[None]])
 
 
 def gather_param(w: jax.Array, *storage_names: Optional[str]) -> jax.Array:

@@ -164,15 +164,16 @@ def test_run_epoch_and_serving_loop_on_device():
     prims = {e.primitive.name for e in jaxpr.jaxpr.eqns}
     assert not prims & {"pure_callback", "io_callback", "callback"}
 
-    st2, plane2, res, plen, ovf = sx.run_serving(
+    st2, plane2, res, plen, ovf, spl = sx.run_serving(
         st, plane, jnp.asarray(kinds), jnp.asarray(keys),
         jnp.asarray(ups))
     assert res.shape == plen.shape == (E, B)
     assert ovf.shape == (E,) and not np.asarray(ovf).any()
+    assert spl.shape == (E,) and not np.asarray(spl).any()
     _assert_plane_equal(plane2, la.from_state(st2, min_levels=L, width=W))
 
     # aggregate (flat-combined contains) epoch variant
-    st3, plane3, res3, _, _ = sx.run_epoch(
+    st3, plane3, res3, _, _, _ = sx.run_epoch(
         st, plane, jnp.asarray(kinds[0]), jnp.asarray(keys[0]),
         jnp.asarray(ups[0]), aggregate=True)
     _assert_plane_equal(plane3, la.from_state(st3, min_levels=L, width=W))
@@ -246,7 +247,7 @@ def test_run_serving_overflow_triggers_rebuild_next_epoch():
     keys[0, :] = np.arange(1, 2 * B, 2)                  # 48 fresh inserts
     keys[1:, :] = np.resize(np.arange(0, 100, 2), (E - 1, B))
     ups = np.ones((E, B), bool)
-    st2, plane2, _, _, ovf = sx.run_serving(
+    st2, plane2, _, _, ovf, _ = sx.run_serving(
         st, plane, jnp.asarray(kinds), jnp.asarray(keys),
         jnp.asarray(ups), max_new=16)
     ovf = np.asarray(ovf)

@@ -1,0 +1,220 @@
+"""Routed query exchange (DESIGN.md §5.6) — the pieces that do not need
+a multi-device runtime.
+
+The differential battery (routed vs replicate-and-mask vs replicated on
+1/2/4-way forced host meshes: duplicate boundary keys, forced capacity
+spill, single-owner batches, empty-plane routing, mass-weighted
+re-split epochs with boundary-table monotonicity) runs in the
+``benchmarks/sharded_search_probe.py --parity`` subprocess, invoked by
+``tests/test_sharded_search.py::test_sharded_parity_on_host_mesh``.
+Here: the static capacity math, the mass-split boundary solver's
+invariants, the no-mesh fallback contract of the routed entry point
+(including its stats convention), and the split-argument validation.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import device_index as dix
+from repro.core import splaylist as sx
+from repro.kernels import splay_search as ssk
+from repro.parallel import sharding as shd
+
+from conftest import seed_splay_state as _seed_state  # noqa: E402
+
+
+def _plane(pool, n_levels=12, width=252, cap=512):
+    return (dix.from_state_device(_seed_state(pool, cap=cap),
+                                  n_levels=n_levels, width=width))
+
+
+# ---------------------------------------------------------------------------
+# route_capacity: the static per-shard receive block
+# ---------------------------------------------------------------------------
+
+def test_route_capacity_default_math():
+    # ceil(q/S) * slack, clamped into [1, q_padded]
+    assert ssk.route_capacity(4096, 4) == int(np.ceil(1024 * 1.5))
+    assert ssk.route_capacity(4096, 4, slack=1.0) == 1024
+    assert ssk.route_capacity(10, 4, slack=1.5) == 5       # ceil(3*1.5)
+    assert ssk.route_capacity(3, 4) == 2                   # <= q_padded=4
+    assert ssk.route_capacity(1, 4, slack=100.0) == 4      # clamp to q_p
+    assert ssk.route_capacity(1, 1, slack=0.0) == 1        # floor 1
+
+
+# ---------------------------------------------------------------------------
+# mass_split_bounds: monotone, feasible, quantile-placed
+# ---------------------------------------------------------------------------
+
+def _check_bounds(b, total, S, lane_cap):
+    b = np.asarray(b)
+    assert b.shape == (S + 1,)
+    assert b[0] == 0 and b[-1] == total
+    assert (np.diff(b) >= 0).all(), b
+    assert (np.diff(b) <= lane_cap).all(), b
+
+
+def test_mass_bounds_uniform_mass_equals_equal_lanes():
+    # uniform mass over a 75%-occupied row: quantiles ARE the equal-
+    # count boundaries
+    W, S = 64, 4
+    total = 48
+    mass = np.zeros(W, np.int32)
+    mass[:total] = 1
+    b = shd.mass_split_bounds(jnp.cumsum(jnp.asarray(mass)),
+                              jnp.int32(total), S, W // S)
+    _check_bounds(b, total, S, W // S)
+    np.testing.assert_array_equal(np.asarray(b), [0, 12, 24, 36, 48])
+
+
+def test_mass_bounds_skewed_mass_moves_boundaries():
+    # all mass on the first 4 keys: each of them anchors a shard, the
+    # cold tail spreads over the remainder under the lane cap
+    W, S = 64, 4
+    total = 40
+    mass = np.ones(W, np.int32)
+    mass[total:] = 0
+    mass[:4] = 1000
+    b = np.asarray(shd.mass_split_bounds(
+        jnp.cumsum(jnp.asarray(mass)), jnp.int32(total), S, W // S))
+    _check_bounds(b, total, S, W // S)
+    # the first boundary lands inside the hot head (mass quantile), the
+    # later ones are pushed right by the lane-cap feasibility window so
+    # the 36-key cold tail still fits in the remaining shards
+    assert b[1] <= 4, b
+    np.testing.assert_array_equal(b[2:], [8, 24, 40])
+
+
+def test_mass_bounds_full_plane_forces_equal_lanes():
+    # total == S * lane_cap leaves zero freedom: every shard must hold
+    # exactly lane_cap keys whatever the mass says
+    W, S = 64, 4
+    mass = np.ones(W, np.int32)
+    mass[:3] = 10 ** 6
+    b = shd.mass_split_bounds(jnp.cumsum(jnp.asarray(mass)),
+                              jnp.int32(W), S, W // S)
+    np.testing.assert_array_equal(np.asarray(b), [0, 16, 32, 48, 64])
+
+
+def test_mass_bounds_empty_and_single_shard():
+    b0 = shd.mass_split_bounds(jnp.zeros((16,), jnp.int32),
+                               jnp.int32(0), 4, 4)
+    np.testing.assert_array_equal(np.asarray(b0), [0, 0, 0, 0, 0])
+    b1 = shd.mass_split_bounds(jnp.cumsum(jnp.ones((16,), jnp.int32)),
+                               jnp.int32(16), 1, 16)
+    np.testing.assert_array_equal(np.asarray(b1), [0, 16])
+
+
+def test_mass_bounds_capacity_clamp_keeps_feasibility():
+    # one key owns ~all mass -> the quantile solver would put every
+    # boundary at rank <=1, but then the LAST shard would need more
+    # than lane_cap keys; the feasibility window must push boundaries
+    # right so every segment still fits
+    W, S = 32, 4
+    total = 32
+    mass = np.ones(W, np.int32)
+    mass[0] = 10 ** 6
+    b = np.asarray(shd.mass_split_bounds(
+        jnp.cumsum(jnp.asarray(mass)), jnp.int32(total), S, W // S))
+    _check_bounds(b, total, S, W // S)
+
+
+# ---------------------------------------------------------------------------
+# wrapper fallbacks and stats conventions (single-device runtime)
+# ---------------------------------------------------------------------------
+
+def test_routed_no_mesh_fallback_with_stats():
+    """Without a resolvable mesh the routed entry point IS the
+    replicated search; the stats report zero spill and one pseudo-shard
+    owning the whole batch."""
+    plane = _plane(list(range(0, 160, 2)))
+    qs = jnp.asarray(np.asarray([0, 1, 2, 77, 158, 300, -4], np.int32))
+    f, r, lv, stats = ssk.splay_search_sharded(plane, qs,
+                                               return_stats=True)
+    out_r = ssk.splay_search(plane, qs, sharded=False)
+    for a, b in zip((f, r, lv), out_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(stats.spill) == 0
+    np.testing.assert_array_equal(np.asarray(stats.occupancy),
+                                  [qs.shape[0]])
+
+
+def test_routed_empty_queries_with_stats():
+    plane = _plane(list(range(0, 40, 2)), width=124, cap=128)
+    f, r, lv, stats = ssk.splay_search_sharded(
+        plane, jnp.zeros((0,), jnp.int32), return_stats=True)
+    assert f.shape == r.shape == lv.shape == (0,)
+    assert int(stats.spill) == 0
+
+
+def test_refresh_split_validation():
+    plane = _plane([2, 4, 6], n_levels=6, width=62, cap=64)
+    st = _seed_state([2, 4, 6], cap=64)
+    with pytest.raises(ValueError, match="split"):
+        dix.refresh_device_sharded(st, plane, split="massive")
+    # no mesh: both valid split modes fall back to the replicated
+    # refresh (which packs) with the sharded return convention
+    p1, ov1 = dix.refresh_device_sharded(st, plane, split="mass")
+    p2, ov2 = dix.refresh_device_sharded(st, plane, split="lanes")
+    assert int(ov1) == int(ov2) == 0
+    np.testing.assert_array_equal(np.asarray(p1.keys),
+                                  np.asarray(p2.keys))
+
+
+def test_gather_path_rejects_segmented_plane():
+    """A concrete mass-split (segmented) plane has interior pad runs in
+    its bottom row — silently wrong under the single-device binary
+    descent, so the gather-to-replicated path must refuse it."""
+    plane = _plane(list(range(0, 80, 2)), n_levels=6, width=124, cap=256)
+    keys = np.asarray(plane.keys).copy()
+    keys[-1, 10:20] = ssk.PAD_KEY                 # interior pad run
+    seg = plane._replace(keys=jnp.asarray(keys))
+    qs = jnp.asarray(np.asarray([0, 4, 30], np.int32))
+    with pytest.raises(ValueError, match="segmented"):
+        ssk.splay_search(seg, qs, sharded=False)
+    with pytest.raises(ValueError, match="segmented"):
+        ssk.splay_search_full(seg, qs)
+    # packed planes (trailing pads only) pass untouched
+    f, _, _ = ssk.splay_search(plane, qs, sharded=False)
+    assert bool(f[0])
+
+
+def test_meshless_paths_reject_mass_and_segmented():
+    """The replicated epoch/refresh fallbacks must refuse what they
+    cannot represent: split='mass' (needs the sharded refresh) and a
+    concrete segmented plane (packed-row invariants would silently
+    corrupt/answer wrongly)."""
+    st = _seed_state(list(range(0, 80, 2)), cap=256)
+    plane = dix.from_state_device(st, n_levels=12, width=126)
+    B = 8
+    args = (st, plane, jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B,), jnp.int32), jnp.ones((B,), bool))
+    with pytest.raises(ValueError, match="mass"):
+        sx.run_epoch(*args, split="mass")
+    with pytest.raises(ValueError, match="mass"):
+        sx.run_serving(st, plane, jnp.zeros((1, B), jnp.int32),
+                       jnp.zeros((1, B), jnp.int32),
+                       jnp.ones((1, B), bool), split="mass")
+    keys = np.asarray(plane.keys).copy()
+    keys[-1, 10:20] = dix.PAD_KEY                 # fake segmentation
+    seg = plane._replace(keys=jnp.asarray(keys))
+    with pytest.raises(ValueError, match="segmented"):
+        sx.run_epoch(st, seg, *args[2:])
+    with pytest.raises(ValueError, match="segmented"):
+        dix.refresh_device_sharded(st, seg)       # meshless fallback
+    assert dix.plane_is_segmented(seg)
+    assert not dix.plane_is_segmented(plane)
+
+
+def test_run_epoch_returns_spill_scalar():
+    """The epoch tuple grew a spill counter; it is zero everywhere off
+    the routed sharded plane-search path."""
+    st = _seed_state(list(range(0, 80, 2)), cap=256)
+    plane = dix.from_state_device(st, n_levels=12, width=126)
+    B = 16
+    out = sx.run_epoch(st, plane, jnp.zeros((B,), jnp.int32),
+                       jnp.zeros((B,), jnp.int32), jnp.ones((B,), bool),
+                       aggregate=True, plane_search=True)
+    assert len(out) == 6
+    assert out[5].shape == () and int(out[5]) == 0

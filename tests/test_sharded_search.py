@@ -123,6 +123,7 @@ def test_plane_search_serving_matches_state_walk():
     np.testing.assert_array_equal(np.asarray(out_p[2]),
                                   np.asarray(out_w[2]))
     assert int(np.asarray(out_p[4]).sum()) == 0
+    assert int(np.asarray(out_p[5]).sum()) == 0     # no routed spill
     assert int(np.asarray(out_p[3]).max()) <= L
     # the states evolve identically (the rebalance fold runs either way)
     np.testing.assert_array_equal(np.asarray(out_p[0].key),
