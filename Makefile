@@ -3,7 +3,7 @@
 PY ?= python
 export PYTHONPATH := src:.
 
-.PHONY: test bench-smoke bench bench-sharded-search check-docs
+.PHONY: test bench-smoke bench bench-sharded-search bench-drift check-docs
 
 # tier-1: the full pytest suite (ROADMAP "Tier-1 verify")
 test:
@@ -27,6 +27,17 @@ bench:
 bench-sharded-search:
 	$(PY) benchmarks/sharded_search_probe.py --bench --routed \
 	  --width 4096 --nq 8192 | tee BENCH_search_sharded.json
+
+# drift-recovery battery (DESIGN.md §5.7): the routing controller raced
+# through the drift scenarios on a forced 1x4 host mesh — bit-identity
+# with the replicated loop, <=1% spill within the ladder-length bound of
+# every transition, controller-off contrast, steady-state hysteresis.
+# Self-asserting (exits nonzero on violation); the CI "Drift recovery"
+# step and the nightly bench job both invoke exactly this target.  The
+# committed trajectory entry lives in the routing_controller key of
+# BENCH_kernels.json (via kernels_bench's drift_probe --bench subprocess).
+bench-drift:
+	$(PY) benchmarks/drift_probe.py --parity
 
 # docs gate: docs/API.md names resolve against the modules; the README
 # quickstart blocks execute (scripts/check_api_docs.py, CI `docs` job)

@@ -289,6 +289,37 @@ def _sharded_search_case(width: int, nq: int) -> dict:
     return out
 
 
+def _drift_case(width: int, nq: int, epochs: int = 10) -> dict:
+    """Routing-controller drift race (DESIGN.md §5.7): controller-on vs
+    static-lanes vs static-mass through the three drift scenarios
+    (rotating hot set, flash crowd, diurnal Zipf mixture) at the
+    acceptance shape, 1x4 host mesh.  The probe
+    (``benchmarks/drift_probe.py --bench``) prints one JSON object with
+    per-epoch spill/max-share/gini trajectories and per-transition
+    time-to-recover; the headline per scenario is the controller's
+    worst recovery time against the static baseline's."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)            # probe forces its own count
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "benchmarks/drift_probe.py", "--bench",
+         "--width", str(width), "--nq", str(nq),
+         "--epochs", str(epochs)],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=3600)
+    assert r.returncode == 0, f"drift probe failed:\n{r.stdout[-2000:]}" \
+                              f"\n{r.stderr[-2000:]}"
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    for name, row in out["scenarios"].items():
+        ttr_on = row["controller"]["time_to_recover"]
+        ttr_off = row["static_lanes"]["time_to_recover"]
+        emit(f"drift_{name}", max(ttr_on, default=0),
+             f"ttr_static={ttr_off};"
+             f"share_on={row['controller']['peak_share_post']:.2f};"
+             f"share_static={row['static_lanes']['peak_share_post']:.2f};"
+             f"retraces={row['controller']['retraces']}")
+    return out
+
+
 def _sharded_refresh_case(width: int) -> dict:
     """Sharded-vs-replicated refresh race on a forced host mesh
     (DESIGN.md §5.4).  The mesh needs
@@ -381,6 +412,11 @@ def run(quick: bool = False) -> dict:
     # mesh's fixed per-collective overhead, or the ratio gate in CI
     # measures dispatch noise instead of the exchange)
     payload["search_sharded"] = _sharded_search_case(4096, 8192)
+    # closed-loop routing controller through the drift scenarios
+    # (DESIGN.md §5.7), also at the acceptance point — the recovery
+    # bound (<=1% spill within K epochs of every transition) is gated
+    # in CI against this entry
+    payload["routing_controller"] = _drift_case(4096, 8192)
 
     # hot_gather: bytes-touched model (hot hits avoid HBM entirely); the
     # hot set comes from observed counts, as the splay heights do

@@ -692,6 +692,19 @@ def _check_plane_dispatch(plane, mesh, axis, split):
             "rebuild with from_state_device before meshless serving")
 
 
+def _check_route_args(route_capacity, route_slack):
+    """Host-side guard for the routed exchange's sizing knobs, applied
+    even on meshless runs (where they are inert) so nonsense never jits
+    a cell it would silently misuse on the next, sharded, call."""
+    if route_capacity is not None and int(route_capacity) < 1:
+        raise ValueError(
+            f"route_capacity must be >= 1, got {route_capacity}")
+    if route_slack is not None and route_slack < 1.0:
+        raise ValueError(
+            f"route_slack must be >= 1.0, got {route_slack} "
+            "(sub-1 slack guarantees spill on a balanced batch)")
+
+
 @functools.partial(jax.jit, static_argnames=("aggregate", "max_new",
                                              "mesh", "axis",
                                              "plane_search", "split",
@@ -753,9 +766,9 @@ def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
     the structure.
 
     Returns ``(state, plane, results[B], path_len[B], overflow,
-    spill)`` where ``overflow`` (int32 scalar) counts alive keys the
-    refreshed plane could not represent this epoch: inserts beyond
-    ``max_new`` plus alive keys beyond the plane width.  Nonzero
+    spill, occupancy)`` where ``overflow`` (int32 scalar) counts alive
+    keys the refreshed plane could not represent this epoch: inserts
+    beyond ``max_new`` plus alive keys beyond the plane width.  Nonzero
     overflow means the plane is stale until the caller (or
     :func:`run_serving`'s carry) triggers the rebuild; a rebuild at the
     same shape cannot fix ``size > width`` — that persists in
@@ -764,12 +777,17 @@ def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
     answered through the routed exchange's spill path this epoch (0
     except on the sharded ``plane_search`` path) — persistent nonzero
     spill is the signal to raise ``route_capacity`` or switch
-    ``split="mass"``."""
+    ``split="mass"``.  ``occupancy`` (int32 ``[S]``) is the routed
+    exchange's per-shard live-query counts (``RouteStats.occupancy``;
+    sums to B) on that same path, and a single-element zero vector on
+    every other path — the balance signal the routing controller
+    (``core.route_controller``, DESIGN.md §5.7) feeds on."""
     from repro.core import device_index as dix
     n_levels, width = plane.keys.shape
     sharded = (mesh is not None and axis in mesh.shape
                and width % mesh.shape[axis] == 0)
     spill = jnp.zeros((), jnp.int32)
+    occupancy = jnp.zeros((1,), jnp.int32)
     if plane_search:
         if not aggregate:
             raise ValueError("plane_search answers membership from the "
@@ -785,6 +803,7 @@ def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
                        else ssk.DEFAULT_ROUTE_SLACK),
                 return_stats=True)
             spill = rstats.spill
+            occupancy = rstats.occupancy
         else:
             res, _, plen = kops.splay_search(plane, keys, sharded=False)
         st, _, _ = run_contains_batch(st, keys, upd_mask, aggregate=True)
@@ -824,7 +843,7 @@ def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
         plane = type(plane)(*(
             jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
             for x, s in zip(plane, specs)))
-    return st, plane, res, plen, overflow, spill
+    return st, plane, res, plen, overflow, spill, occupancy
 
 
 def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
@@ -833,6 +852,7 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
               plane_search: bool = False, split: str = "lanes",
               route_capacity: int = None, route_slack: float = None):
     _check_plane_dispatch(plane, mesh, axis, split)
+    _check_route_args(route_capacity, route_slack)
     return _run_epoch(st, plane, kinds, keys, upd_mask,
                       aggregate=aggregate, max_new=max_new,
                       rebuild=rebuild, mesh=mesh, axis=axis,
@@ -881,31 +901,35 @@ def _run_serving(st: SplayState, plane, kinds, keys, upd_mask,
     steady-state serving at high occupancy keeps the cheap incremental
     refresh instead of paying a full rebuild every epoch.  Returns
     ``(state, plane, results[E, B], path_len[E, B], overflow[E],
-    spill[E])``; ``overflow[e] > 0`` flags the stale epochs (staleness
-    lasts one epoch; persistent nonzero overflow means the alive count
-    exceeds the plane width — rebuild wider at the host level) and
-    ``spill[e]`` counts the routed-exchange spills per epoch
-    (persistently nonzero spill under ``split="lanes"`` is the signal
-    to switch to ``"mass"`` or raise ``route_capacity``)."""
+    spill[E], occupancy[E, S])``; ``overflow[e] > 0`` flags the stale
+    epochs (staleness lasts one epoch; persistent nonzero overflow
+    means the alive count exceeds the plane width — rebuild wider at
+    the host level), ``spill[e]`` counts the routed-exchange spills per
+    epoch (persistently nonzero spill under ``split="lanes"`` is the
+    signal to switch to ``"mass"`` or raise ``route_capacity``), and
+    ``occupancy[e]`` is that epoch's per-shard live-query counts
+    (``[E, 1]`` zeros off the sharded ``plane_search`` path) — together
+    the per-epoch feedback the routing controller consumes between
+    calls (``core.route_controller``, DESIGN.md §5.7)."""
     width = plane.keys.shape[1]
     B = keys.shape[1]
 
     def step(carry, ep):
         s, pl, pending, pressed = carry
         kd, ks, up = ep
-        s, pl, res, plen, ovf, spl = _run_epoch(
+        s, pl, res, plen, ovf, spl, occ = _run_epoch(
             s, pl, kd, ks, up, aggregate=aggregate, max_new=max_new,
             rebuild=pending, mesh=mesh, axis=axis,
             plane_search=plane_search, split=split,
             route_capacity=route_capacity, route_slack=route_slack)
         pressure = s.size + B > width
         pending = (ovf > 0) | (pressure & ~pressed)
-        return (s, pl, pending, pressure), (res, plen, ovf, spl)
+        return (s, pl, pending, pressure), (res, plen, ovf, spl, occ)
 
-    (st, plane, _, _), (res, plen, ovf, spl) = jax.lax.scan(
+    (st, plane, _, _), (res, plen, ovf, spl, occ) = jax.lax.scan(
         step, (st, plane, jnp.asarray(False), jnp.asarray(False)),
         (kinds, keys, upd_mask))
-    return st, plane, res, plen, ovf, spl
+    return st, plane, res, plen, ovf, spl, occ
 
 
 def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
@@ -914,6 +938,7 @@ def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
                 plane_search: bool = False, split: str = "lanes",
                 route_capacity: int = None, route_slack: float = None):
     _check_plane_dispatch(plane, mesh, axis, split)
+    _check_route_args(route_capacity, route_slack)
     return _run_serving(st, plane, kinds, keys, upd_mask,
                         aggregate=aggregate, max_new=max_new,
                         mesh=mesh, axis=axis,

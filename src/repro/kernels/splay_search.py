@@ -626,14 +626,31 @@ def _routed_search_fn(mesh, axis: str, n_levels: int, query_block: int,
 def route_capacity(nq: int, n_shards: int,
                    slack: float = DEFAULT_ROUTE_SLACK) -> int:
     """The default static per-shard receive capacity of the routed
-    exchange: ``ceil(q/S) · slack``, clamped into ``[1, q_padded]``
+    exchange: ``ceil(q/S) · slack``, clamped into ``[1, q]``
     (DESIGN.md §5.6).  ``slack`` absorbs routing imbalance — under the
     mass-weighted split (§5.6) occupancy concentrates near q/S, so the
     default 1.5 leaves spill a rare event rather than a safety
-    requirement (spilled queries still answer exactly, just slower)."""
+    requirement (spilled queries still answer exactly, just slower).
+    The upper clamp is the batch size itself: a shard can never receive
+    more than ``q`` live queries (``occupancy.sum() == q``), so any
+    capacity past it is wasted wire — ``slack >= S`` therefore makes
+    spill structurally impossible, which is the routing controller's
+    escape hatch (DESIGN.md §5.7).
+
+    Raises ``ValueError`` on non-positive ``nq``/``n_shards`` and on
+    ``slack < 1.0`` (a sub-1 slack silently guarantees spill on a
+    perfectly balanced batch — always a caller bug)."""
+    if nq <= 0:
+        raise ValueError(f"route_capacity: nq must be positive, got {nq}")
+    if n_shards <= 0:
+        raise ValueError(
+            f"route_capacity: n_shards must be positive, got {n_shards}")
+    if slack < 1.0:
+        raise ValueError(
+            f"route_capacity: slack must be >= 1.0, got {slack} "
+            "(sub-1 slack guarantees spill on a balanced batch)")
     qs = -(-nq // n_shards)
-    q_p = qs * n_shards
-    return max(1, min(q_p, int(-(-qs * slack // 1))))
+    return max(1, min(nq, int(-(-qs * slack // 1))))
 
 
 def splay_search_sharded(level_keys, queries, query_block: int =
@@ -692,6 +709,12 @@ def splay_search_sharded(level_keys, queries, query_block: int =
         raise TypeError("splay_search_sharded takes an index plane "
                         "struct (DeviceLevelArrays/LevelArrays), got "
                         f"{type(level_keys).__name__}")
+    if capacity is not None and int(capacity) < 1:
+        raise ValueError(
+            f"splay_search_sharded: capacity must be >= 1, got {capacity}")
+    if capacity is None and slack < 1.0:
+        raise ValueError(
+            f"splay_search_sharded: slack must be >= 1.0, got {slack}")
     if mesh is None:
         mesh = shd.plane_width_mesh(plane, axis) or shd.active_mesh()
     n_levels, width = plane.keys.shape
@@ -729,6 +752,10 @@ def splay_search_sharded(level_keys, queries, query_block: int =
     pad = qs * S - nq
     if capacity is None:
         capacity = route_capacity(nq, S, slack)
+    else:
+        # a shard can never receive more than the whole batch: clamp
+        # explicit capacities at q too (wire-size hygiene, same answers)
+        capacity = min(int(capacity), nq)
     if pad:
         queries = jnp.pad(queries, (0, pad),
                           constant_values=PAD_KEY - 1)

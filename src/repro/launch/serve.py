@@ -55,7 +55,7 @@ def splay_demo(args) -> dict:
                     rng.integers(0, 4000, (E, B))).astype(np.int32)
     ups = rng.random((E, B)) < 0.5
 
-    st2, plane2, res, plen, ovf, _ = sx.run_serving(
+    st2, plane2, res, plen, ovf, _, _ = sx.run_serving(
         st, plane, jnp.asarray(kinds), jnp.asarray(keys),
         jnp.asarray(ups))
     out = {
@@ -81,10 +81,10 @@ def splay_demo(args) -> dict:
         # sharded plane search (all_to_all query exchange), refreshed
         # by the *sharded* refresh — vs the replicated loop
         ck = np.zeros_like(kinds)
-        st_r, pl_r, res_r, plen_r, _, _ = sx.run_serving(
+        st_r, pl_r, res_r, plen_r, _, _, _ = sx.run_serving(
             st, plane, jnp.asarray(ck), jnp.asarray(keys),
             jnp.asarray(ups), aggregate=True, plane_search=True)
-        st_s, pl_s, res_s, plen_s, _, spill_s = sx.run_serving(
+        st_s, pl_s, res_s, plen_s, _, spill_s, occ_s = sx.run_serving(
             st, plane_s, jnp.asarray(ck), jnp.asarray(keys),
             jnp.asarray(ups), aggregate=True, plane_search=True,
             mesh=mesh)
@@ -98,7 +98,7 @@ def splay_demo(args) -> dict:
         # the same loop under the mass-weighted re-split (§5.6): the
         # plane goes segmented, so only the answers — not the layout —
         # are compared against the replicated loop
-        st_m, _, res_m, plen_m, _, spill_m = sx.run_serving(
+        st_m, _, res_m, plen_m, _, spill_m, occ_m = sx.run_serving(
             st, plane_s, jnp.asarray(ck), jnp.asarray(keys),
             jnp.asarray(ups), aggregate=True, plane_search=True,
             mesh=mesh, split="mass")
@@ -106,6 +106,20 @@ def splay_demo(args) -> dict:
             (np.asarray(res_m) == np.asarray(res_r)).all()
             and (np.asarray(plen_m) == np.asarray(plen_r)).all()
             and (np.asarray(st_m.key) == np.asarray(st_r.key)).all())
+
+        # routing balance per epoch (DESIGN.md §5.6–§5.7): spill alone
+        # hides a skewed-but-under-capacity exchange — print the
+        # occupancy-derived max-share and gini so drift is visible
+        # straight from the demo
+        from repro.core import route_controller as rc
+        for e in range(E):
+            print(f"  epoch {e}: spill {int(np.asarray(spill_s)[e]):4d}"
+                  f"/{int(np.asarray(spill_m)[e]):4d} (lanes/mass), "
+                  f"max-share "
+                  f"{rc.max_share(np.asarray(occ_s)[e]):.2f}/"
+                  f"{rc.max_share(np.asarray(occ_m)[e]):.2f}, "
+                  f"gini {rc.routing_gini(np.asarray(occ_s)[e]):.2f}/"
+                  f"{rc.routing_gini(np.asarray(occ_m)[e]):.2f}")
 
         # the search alone, sharded vs gather-to-replicated dispatch
         qs = jnp.asarray(keys[0])
@@ -127,6 +141,27 @@ def splay_demo(args) -> dict:
         refresh_match = all(
             (np.asarray(getattr(ps, f)) == np.asarray(getattr(pr, f))).all()
             for f in ("keys", "widths", "heights", "rank_map"))
+
+        # the closed loop (DESIGN.md §5.7): the routing controller
+        # steering slack/split/rebuild from the spill+occupancy
+        # feedback, bit-identical answers to the replicated loop
+        cfg, c0 = rc.init_controller(n_dev)
+        st_c, _, res_c, plen_c, _, spl_c, occ_c, cstates = \
+            rc.run_serving_controlled(
+                st, plane_s, jnp.asarray(ck), jnp.asarray(keys),
+                jnp.asarray(ups), aggregate=True, plane_search=True,
+                mesh=mesh, cfg=cfg, state=c0)
+        ctrl_match = (
+            (np.asarray(res_c) == np.asarray(res_r)).all()
+            and (np.asarray(plen_c) == np.asarray(plen_r)).all())
+        cfin = cstates[-1]
+        print(f"controller: bit_identical={bool(ctrl_match)}, "
+              f"slack {c0.slack_of(cfg)} -> {cfin.slack_of(cfg)}, "
+              f"split -> {cfin.split}, retraces {cfin.retraces}, "
+              f"escalations {cfin.escalations}, "
+              f"spill {int(np.asarray(spl_c).sum())}, "
+              f"final max-share {cfin.last_share:.2f}, "
+              f"gini {cfin.last_gini:.2f}")
         out["sharded"] = {
             "shards": n_dev,
             "serving_bit_identical": bool(serve_match),
@@ -135,7 +170,17 @@ def splay_demo(args) -> dict:
             "refresh_bit_identical": bool(refresh_match),
             "overflow": int(ov_s),
             "routed_spill": int(np.asarray(spill_s).sum()),
-            "routed_spill_mass": int(np.asarray(spill_m).sum())}
+            "routed_spill_mass": int(np.asarray(spill_m).sum()),
+            "max_share_lanes": rc.max_share(np.asarray(occ_s).sum(0)),
+            "max_share_mass": rc.max_share(np.asarray(occ_m).sum(0)),
+            "routing_gini_lanes": rc.routing_gini(
+                np.asarray(occ_s).sum(0)),
+            "routing_gini_mass": rc.routing_gini(
+                np.asarray(occ_m).sum(0)),
+            "controller_bit_identical": bool(ctrl_match),
+            "controller_retraces": int(cfin.retraces),
+            "controller_escalations": int(cfin.escalations),
+            "controller_spill": int(np.asarray(spl_c).sum())}
         print(f"sharded serving on {n_dev} shards: "
               f"epochs bit_identical={serve_match}, "
               f"mass-split bit_identical={mass_match}, "

@@ -164,16 +164,17 @@ def test_run_epoch_and_serving_loop_on_device():
     prims = {e.primitive.name for e in jaxpr.jaxpr.eqns}
     assert not prims & {"pure_callback", "io_callback", "callback"}
 
-    st2, plane2, res, plen, ovf, spl = sx.run_serving(
+    st2, plane2, res, plen, ovf, spl, occ = sx.run_serving(
         st, plane, jnp.asarray(kinds), jnp.asarray(keys),
         jnp.asarray(ups))
     assert res.shape == plen.shape == (E, B)
     assert ovf.shape == (E,) and not np.asarray(ovf).any()
     assert spl.shape == (E,) and not np.asarray(spl).any()
+    assert occ.shape == (E, 1) and not np.asarray(occ).any()
     _assert_plane_equal(plane2, la.from_state(st2, min_levels=L, width=W))
 
     # aggregate (flat-combined contains) epoch variant
-    st3, plane3, res3, _, _, _ = sx.run_epoch(
+    st3, plane3, res3, _, _, _, _ = sx.run_epoch(
         st, plane, jnp.asarray(kinds[0]), jnp.asarray(keys[0]),
         jnp.asarray(ups[0]), aggregate=True)
     _assert_plane_equal(plane3, la.from_state(st3, min_levels=L, width=W))
@@ -247,7 +248,7 @@ def test_run_serving_overflow_triggers_rebuild_next_epoch():
     keys[0, :] = np.arange(1, 2 * B, 2)                  # 48 fresh inserts
     keys[1:, :] = np.resize(np.arange(0, 100, 2), (E - 1, B))
     ups = np.ones((E, B), bool)
-    st2, plane2, _, _, ovf, _ = sx.run_serving(
+    st2, plane2, _, _, ovf, _, _ = sx.run_serving(
         st, plane, jnp.asarray(kinds), jnp.asarray(keys),
         jnp.asarray(ups), max_new=16)
     ovf = np.asarray(ovf)
@@ -258,6 +259,60 @@ def test_run_serving_overflow_triggers_rebuild_next_epoch():
     w_bot = int(plane2.widths[-1])
     final = set(np.asarray(plane2.keys)[-1][:w_bot].tolist())
     assert set(keys[0].tolist()) <= final
+
+
+def test_run_serving_repeated_overflow_bursts():
+    """Sustained pressure on the overflow state machine: two insert
+    bursts past ``max_new``, separated by one quiet epoch, each arm
+    their own rebuild — the machine re-arms after recovering, it is not
+    a one-shot latch — and the final plane drops nothing."""
+    st = _seed_state(list(range(0, 100, 2)), cap=512)
+    W, L = 254, 12
+    plane = dix.from_state_device(st, n_levels=L, width=W)
+    E, B = 5, 48
+    kinds = np.full((E, B), sx.OP_CONTAINS, np.int32)
+    keys = np.resize(np.arange(0, 100, 2), (E, B)).astype(np.int32)
+    for e, lo in ((0, 1), (2, 101)):                     # fresh odd keys
+        kinds[e, :] = sx.OP_INSERT
+        keys[e, :] = np.arange(lo, lo + 2 * B, 2)
+    ups = np.ones((E, B), bool)
+    st2, plane2, _, _, ovf, _, _ = sx.run_serving(
+        st, plane, jnp.asarray(kinds), jnp.asarray(keys),
+        jnp.asarray(ups), max_new=16)
+    ovf = np.asarray(ovf)
+    assert ovf[0] == B - 16 and ovf[2] == B - 16         # both flagged
+    assert ovf[1] == 0 and (ovf[3:] == 0).all()          # both rebuilt
+    _assert_plane_equal(plane2, la.from_state(st2, min_levels=L, width=W))
+    w_bot = int(plane2.widths[-1])
+    final = set(np.asarray(plane2.keys)[-1][:w_bot].tolist())
+    assert set(keys[0].tolist()) | set(keys[2].tolist()) <= final
+
+
+def test_run_serving_burst_on_rebuild_epoch_absorbed():
+    """A second burst landing on the rebuild epoch itself does NOT
+    overflow: the epoch's ops run before its refresh, so the
+    ``from_state_device`` rebuild already sees (and holds) the new
+    keys — back-to-back bursts cost one overflow epoch, not two."""
+    st = _seed_state(list(range(0, 100, 2)), cap=512)
+    W, L = 254, 12
+    plane = dix.from_state_device(st, n_levels=L, width=W)
+    E, B = 3, 48
+    kinds = np.full((E, B), sx.OP_CONTAINS, np.int32)
+    keys = np.resize(np.arange(0, 100, 2), (E, B)).astype(np.int32)
+    for e, lo in ((0, 1), (1, 101)):                     # consecutive
+        kinds[e, :] = sx.OP_INSERT
+        keys[e, :] = np.arange(lo, lo + 2 * B, 2)
+    ups = np.ones((E, B), bool)
+    st2, plane2, _, _, ovf, _, _ = sx.run_serving(
+        st, plane, jnp.asarray(kinds), jnp.asarray(keys),
+        jnp.asarray(ups), max_new=16)
+    ovf = np.asarray(ovf)
+    assert ovf[0] == B - 16
+    assert (ovf[1:] == 0).all()                          # absorbed
+    _assert_plane_equal(plane2, la.from_state(st2, min_levels=L, width=W))
+    w_bot = int(plane2.widths[-1])
+    final = set(np.asarray(plane2.keys)[-1][:w_bot].tolist())
+    assert set(keys[0].tolist()) | set(keys[1].tolist()) <= final
 
 
 def test_from_state_device_pads_small_states():

@@ -1,0 +1,239 @@
+"""The routing controller's control law (DESIGN.md §5.7) — pure host
+math, no mesh needed.
+
+The closed loop end-to-end (controller-on vs controller-off through the
+drift scenarios on a forced 1x4 host mesh, bit-identity + recovery
+bounds) runs in the ``benchmarks/drift_probe.py --parity`` subprocess,
+invoked by CI's "Drift recovery" step.  Here: the slack ladder, the
+hysteresis band, the escalation ladder lanes->mass->rebuild, the
+de-escalation backoff, the meshless no-op contract, and the balance
+statistics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import device_index as dix
+from repro.core import route_controller as rc
+from repro.core import splaylist as sx
+from repro.kernels import splay_search as ssk
+
+from conftest import seed_splay_state as _seed_state  # noqa: E402
+
+NQ, S = 8192, 4
+
+
+def _cfg():
+    return rc.init_controller(S)
+
+
+def _steps(cfg, state, occs, spills=None, nq=NQ):
+    """Fold a sequence of (occupancy, spill) epochs through the law."""
+    out = []
+    for i, occ in enumerate(occs):
+        sp = 0 if spills is None else spills[i]
+        state = rc.controller_step(cfg, state, sp, np.asarray(occ), nq)
+        out.append(state)
+    return out
+
+
+def _hot(nq=NQ):
+    """One shard owns 80% of the batch (a contiguous hot window under
+    equal lanes)."""
+    big = int(nq * 0.8)
+    rest = (nq - big) // (S - 1)
+    return np.asarray([big] + [rest] * (S - 1))
+
+
+def _balanced(nq=NQ):
+    return np.full(S, nq // S)
+
+
+def _spill_for(cfg, state, occ, nq=NQ):
+    cap = ssk.route_capacity(nq, S, state.slack_of(cfg))
+    return int(np.maximum(np.asarray(occ) - cap, 0).sum())
+
+
+# ---------------------------------------------------------------------------
+# ladder + config construction
+# ---------------------------------------------------------------------------
+
+def test_default_slack_ladder():
+    lad = rc.default_slack_ladder(4)
+    assert lad == (1.0, 1.5, 2.25, 3.375, 4.0)
+    assert lad[-1] == 4.0                  # top rung = S: capacity == q
+    assert ssk.route_capacity(NQ, 4, lad[-1]) == NQ   # spill impossible
+    assert rc.default_slack_ladder(1) == (1.0,)
+    assert rc.default_slack_ladder(2)[-1] == 2.0
+    assert all(b > a for a, b in zip(lad, lad[1:]))   # strictly rising
+    with pytest.raises(ValueError):
+        rc.default_slack_ladder(0)
+
+
+def test_init_controller_starts_at_default_slack():
+    cfg, st = _cfg()
+    assert st.slack_of(cfg) == ssk.DEFAULT_ROUTE_SLACK
+    assert st.split == "lanes" and not st.force_rebuild
+    assert st.ewma < 0                     # estimator unset
+    cfg2, st2 = rc.init_controller(4, slack_ladder=(1.0, 4.0),
+                                   gini_hi=0.5)
+    assert cfg2.slack_ladder == (1.0, 4.0) and cfg2.gini_hi == 0.5
+    assert st2.slack_idx in (0, 1)
+
+
+# ---------------------------------------------------------------------------
+# hysteresis: steady state never actuates
+# ---------------------------------------------------------------------------
+
+def test_balanced_steady_state_never_actuates():
+    cfg, st = _cfg()
+    states = _steps(cfg, st, [_balanced()] * 20)
+    final = states[-1]
+    assert final.retraces == 0 and final.escalations == 0
+    assert final.slack_idx == st.slack_idx and final.split == "lanes"
+    assert final.calm >= 19
+    assert abs(final.ewma - NQ // S) < 1e-6
+
+
+def test_mild_imbalance_inside_band_never_actuates():
+    # 30% max share at slack 1.5 (capacity 37.5% of the batch, high
+    # water at 85% of that = 2611): under the mark and under gini_hi —
+    # the band absorbs it, no re-trace
+    cfg, st = _cfg()
+    occ = np.asarray([2458, 1911, 1911, 1912])
+    states = _steps(cfg, st, [occ] * 12)
+    assert states[-1].retraces == 0 and states[-1].escalations == 0
+
+
+# ---------------------------------------------------------------------------
+# the escalation ladder: slack growth -> mass -> rebuild
+# ---------------------------------------------------------------------------
+
+def test_spill_grows_slack_to_structural_ceiling():
+    cfg, st = _cfg()
+    occ = _hot()
+    traj = []
+    for _ in range(6):
+        st = rc.controller_step(cfg, st, _spill_for(cfg, st, occ), occ,
+                                NQ)
+        traj.append(st.slack_idx)
+    # one rung per epoch, monotone, top within the ladder length
+    assert traj == sorted(traj)
+    assert st.slack_idx == len(cfg.slack_ladder) - 1
+    assert traj.index(st.slack_idx) <= len(cfg.slack_ladder)
+    # at the top rung capacity == NQ: spill structurally impossible
+    assert _spill_for(cfg, st, occ) == 0
+    assert st.retraces == st.slack_idx - 1  # counted every rung
+
+
+def test_imbalance_escalates_to_mass_once():
+    cfg, st = _cfg()
+    occ = _hot()   # gini well past gini_hi
+    states = _steps(cfg, st, [occ] * 4,
+                    spills=[_spill_for(cfg, st, occ)] * 4)
+    assert states[0].split == "mass"
+    assert states[-1].split == "mass"
+    assert states[-1].escalations == 1     # once, not per epoch
+
+
+def test_persistent_bad_gini_in_mass_forces_rebuild():
+    # mass is on but boundaries stay skewed (stale counters after a
+    # migration): after rebuild_patience bad epochs the controller
+    # requests one full rebuild, then re-arms
+    cfg, st = _cfg()
+    st = st._replace(split="mass", slack_idx=len(cfg.slack_ladder) - 1)
+    occ = _hot()
+    states = _steps(cfg, st, [occ] * (2 * cfg.rebuild_patience))
+    fired = [s.force_rebuild for s in states]
+    assert fired.count(True) == 2
+    assert fired.index(True) == cfg.rebuild_patience - 1
+    # the flag is one-shot: never two epochs in a row
+    assert not any(a and b for a, b in zip(fired, fired[1:]))
+
+
+def test_deescalation_needs_calm_streak_and_backs_off():
+    cfg, st = _cfg()
+    occ_hot, occ_ok = _hot(), _balanced()
+    st = rc.controller_step(cfg, st, _spill_for(cfg, st, occ_hot),
+                            occ_hot, NQ)
+    assert st.split == "mass"
+    states = _steps(cfg, st, [occ_ok] * 10)
+    splits = [s.split for s in states]
+    assert splits[-1] == "lanes"
+    # not instant: the calm streak must reach calm_epochs first
+    assert splits[:cfg.calm_epochs - 1] == \
+        ["mass"] * (cfg.calm_epochs - 1)
+    back = states[-1].backoff
+    assert back == 2                       # doubled on de-escalation
+    # second round: re-escalate, then the same calm is no longer enough
+    st2 = rc.controller_step(cfg, states[-1], 0, occ_hot, NQ)
+    assert st2.split == "mass" and st2.escalations == 2
+    st3 = _steps(cfg, st2, [occ_ok] * (cfg.calm_epochs - 1))[-1]
+    assert st3.split == "mass"             # still waiting out backoff
+
+
+def test_shrink_only_deep_inside_band_and_never_regrows():
+    cfg, st = _cfg()
+    # drive to the top rung first
+    occ_hot = _hot()
+    for _ in range(4):
+        st = rc.controller_step(cfg, st, _spill_for(cfg, st, occ_hot),
+                                occ_hot, NQ)
+    top = st.slack_idx
+    assert top == len(cfg.slack_ladder) - 1
+    # balanced load: shrink happens, but only after calm streaks, and
+    # each shrink is immediately stable (no grow on the next epoch)
+    occ_ok = _balanced()
+    idxs = [s.slack_idx for s in _steps(cfg, st, [occ_ok] * 30)]
+    assert idxs[-1] < top                  # it does come down
+    for a, b in zip(idxs, idxs[1:]):
+        assert b - a <= 0 or (b - a == 0), (a, b)  # never re-grows
+    assert min(idxs) >= 1                  # parks inside the band, not 0
+
+
+# ---------------------------------------------------------------------------
+# meshless / degenerate inputs
+# ---------------------------------------------------------------------------
+
+def test_single_pseudo_shard_is_a_noop():
+    cfg, st = _cfg()
+    s = rc.controller_step(cfg, st, 0, np.asarray([512]), 512)
+    assert s.slack_idx == st.slack_idx and s.split == st.split
+    assert s.retraces == 0 and s.last_share == 1.0 and s.last_gini == 0
+
+
+def test_balance_stats():
+    assert rc.max_share([2048, 2048, 2048, 2048]) == 0.25
+    assert rc.max_share([0, 0, 0, 100]) == 1.0
+    assert rc.max_share([0, 0, 0, 0]) == 0.0
+    assert rc.routing_gini([2048, 2048, 2048, 2048]) == 0.0
+    assert rc.routing_gini([0, 0, 0, 100]) == pytest.approx(0.75)
+    assert rc.routing_gini([0, 0, 0, 0]) == 0.0
+    assert rc.routing_gini([7]) == 0.0
+
+
+def test_run_serving_controlled_meshless_degrades_to_run_serving():
+    """No mesh: the controller observes the [1]-shard occupancy and
+    never actuates, and the answers are exactly run_serving's."""
+    st = _seed_state(list(range(0, 80, 2)), cap=256)
+    plane = dix.from_state_device(st, n_levels=12, width=126)
+    E, B = 2, 8
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 100, (E, B)).astype(np.int32)
+    kinds = np.zeros((E, B), np.int32)
+    ups = np.ones((E, B), bool)
+    st1, pl1, res1, plen1, ovf1, spl1, occ1, states = \
+        rc.run_serving_controlled(st, plane, jnp.asarray(kinds),
+                                  jnp.asarray(keys), jnp.asarray(ups),
+                                  aggregate=True, plane_search=True)
+    out = sx.run_serving(st, plane, jnp.asarray(kinds),
+                         jnp.asarray(keys), jnp.asarray(ups),
+                         aggregate=True, plane_search=True)
+    np.testing.assert_array_equal(np.asarray(res1), np.asarray(out[2]))
+    np.testing.assert_array_equal(np.asarray(plen1),
+                                  np.asarray(out[3]))
+    np.testing.assert_array_equal(np.asarray(st1.key),
+                                  np.asarray(out[0].key))
+    assert occ1.shape == (E, 1)
+    assert len(states) == E
+    assert states[-1].retraces == 0 and states[-1].escalations == 0

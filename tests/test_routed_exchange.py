@@ -12,6 +12,7 @@ invariants, the no-mesh fallback contract of the routed entry point
 (including its stats convention), and the split-argument validation.
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -34,13 +35,59 @@ def _plane(pool, n_levels=12, width=252, cap=512):
 # ---------------------------------------------------------------------------
 
 def test_route_capacity_default_math():
-    # ceil(q/S) * slack, clamped into [1, q_padded]
+    # ceil(q/S) * slack, clamped into [1, q]
     assert ssk.route_capacity(4096, 4) == int(np.ceil(1024 * 1.5))
     assert ssk.route_capacity(4096, 4, slack=1.0) == 1024
     assert ssk.route_capacity(10, 4, slack=1.5) == 5       # ceil(3*1.5)
-    assert ssk.route_capacity(3, 4) == 2                   # <= q_padded=4
-    assert ssk.route_capacity(1, 4, slack=100.0) == 4      # clamp to q_p
-    assert ssk.route_capacity(1, 1, slack=0.0) == 1        # floor 1
+    assert ssk.route_capacity(3, 4) == 2                   # <= q=3
+    assert ssk.route_capacity(1, 4, slack=100.0) == 1      # clamp to q
+    # slack >= S caps at q exactly: the controller's spill-proof rung
+    assert ssk.route_capacity(4096, 4, slack=4.0) == 4096
+    assert ssk.route_capacity(4097, 4, slack=4.0) == 4097
+
+
+def test_route_capacity_rejects_nonsense():
+    with pytest.raises(ValueError, match="nq"):
+        ssk.route_capacity(0, 4)
+    with pytest.raises(ValueError, match="nq"):
+        ssk.route_capacity(-8, 4)
+    with pytest.raises(ValueError, match="n_shards"):
+        ssk.route_capacity(64, 0)
+    with pytest.raises(ValueError, match="slack"):
+        ssk.route_capacity(64, 4, slack=0.99)
+    with pytest.raises(ValueError, match="slack"):
+        ssk.route_capacity(64, 4, slack=0.0)
+    # exactly 1.0 is the legal floor
+    assert ssk.route_capacity(64, 4, slack=1.0) == 16
+
+
+def test_route_args_rejected_at_every_entry_point():
+    """slack < 1 / capacity < 1 raise host-side everywhere — the search
+    wrapper and the epoch/serving wrappers, mesh or no mesh — instead
+    of silently jitting a spill-guaranteed exchange."""
+    plane = _plane(list(range(0, 80, 2)), width=124, cap=256)
+    qs = jnp.zeros((8,), jnp.int32)
+    with pytest.raises(ValueError, match="slack"):
+        ssk.splay_search_sharded(plane, qs, slack=0.5)
+    with pytest.raises(ValueError, match="capacity"):
+        ssk.splay_search_sharded(plane, qs, capacity=0)
+    st = _seed_state(list(range(0, 80, 2)), cap=256)
+    args = (st, plane, jnp.zeros((8,), jnp.int32),
+            jnp.zeros((8,), jnp.int32), jnp.ones((8,), bool))
+    with pytest.raises(ValueError, match="route_slack"):
+        sx.run_epoch(*args, aggregate=True, plane_search=True,
+                     route_slack=0.5)
+    with pytest.raises(ValueError, match="route_capacity"):
+        sx.run_epoch(*args, aggregate=True, plane_search=True,
+                     route_capacity=0)
+    eargs = (st, plane, jnp.zeros((1, 8), jnp.int32),
+             jnp.zeros((1, 8), jnp.int32), jnp.ones((1, 8), bool))
+    with pytest.raises(ValueError, match="route_slack"):
+        sx.run_serving(*eargs, aggregate=True, plane_search=True,
+                       route_slack=0.999)
+    with pytest.raises(ValueError, match="route_capacity"):
+        sx.run_serving(*eargs, aggregate=True, plane_search=True,
+                       route_capacity=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -207,14 +254,105 @@ def test_meshless_paths_reject_mass_and_segmented():
     assert not dix.plane_is_segmented(plane)
 
 
-def test_run_epoch_returns_spill_scalar():
-    """The epoch tuple grew a spill counter; it is zero everywhere off
-    the routed sharded plane-search path."""
+_needs_mesh = pytest.mark.skipif(
+    len(jax.devices()) < 2,
+    reason="needs a multi-device runtime (forced host mesh)")
+
+
+@_needs_mesh
+def test_overflow_and_spill_same_epoch_sharded():
+    """Sustained pressure on BOTH signals at once: an alive count past
+    the plane width (persistent overflow — a rebuild at the same shape
+    cannot fix it) while a deliberately tiny route_capacity spills
+    queries every epoch.  The state machine must keep reporting both
+    without corrupting either loop."""
+    from repro.parallel import sharding as shd
+    n_dev = len(jax.devices())
+    pool = list(range(0, 320, 2))                        # 160 alive
+    W = 128 if 128 % n_dev == 0 else n_dev * (128 // n_dev)
+    st = _seed_state(pool, cap=512)
+    plane = dix.from_state_device(st, n_levels=12, width=W)
+    mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+    plane_s = shd.shard_index_plane(plane, mesh)
+    E, B = 3, 32
+    keys = np.resize(np.asarray(pool, np.int32), (E, B))
+    out = sx.run_serving(
+        st, plane_s, jnp.zeros((E, B), jnp.int32), jnp.asarray(keys),
+        jnp.ones((E, B), bool), aggregate=True, plane_search=True,
+        mesh=mesh, route_capacity=1)
+    ovf, spl, occ = (np.asarray(out[4]), np.asarray(out[5]),
+                     np.asarray(out[6]))
+    # overflow persists at exactly the unrepresentable excess ...
+    assert (ovf == len(pool) - W).all(), ovf
+    # ... and the same epochs ALSO spill on the routed exchange
+    assert (spl > 0).all(), spl
+    assert occ.shape == (E, n_dev) and (occ.sum(1) == B).all()
+    # spilled-or-not, the answers come from the (stale-by-overflow)
+    # plane exactly: compare against the meshless loop on the same
+    # replicated plane, which shares the staleness
+    ref = sx.run_serving(
+        st, plane, jnp.zeros((E, B), jnp.int32), jnp.asarray(keys),
+        jnp.ones((E, B), bool), aggregate=True, plane_search=True)
+    np.testing.assert_array_equal(np.asarray(out[2]),
+                                  np.asarray(ref[2]))
+    np.testing.assert_array_equal(np.asarray(out[3]),
+                                  np.asarray(ref[3]))
+
+
+@_needs_mesh
+def test_rebuild_while_segmented_plane():
+    """The near-full pressure trigger fires while the carried plane is
+    mass-split (segmented): the full_rebuild branch must consume the
+    segmented plane, emit the packed layout, and the following mass
+    refresh re-split it — answers bit-identical to the replicated loop
+    throughout (DESIGN.md §5.4 + §5.6)."""
+    from repro.parallel import sharding as shd
+    n_dev = len(jax.devices())
+    W = 128 if 128 % n_dev == 0 else n_dev * (128 // n_dev)
+    pool = list(range(0, 2 * (W - 8), 2))                # W-8 alive
+    st = _seed_state(pool, cap=2 * W)
+    plane = dix.from_state_device(st, n_levels=12, width=W)
+    mesh = jax.make_mesh((1, n_dev), ("data", "model"))
+    plane_s = shd.shard_index_plane(plane, mesh)
+    E, B = 4, 32                                         # size+B > W
+    rng = np.random.default_rng(0)
+    keys = rng.choice(pool, (E, B)).astype(np.int32)
+    out = sx.run_serving(
+        st, plane_s, jnp.zeros((E, B), jnp.int32), jnp.asarray(keys),
+        jnp.ones((E, B), bool), aggregate=True, plane_search=True,
+        mesh=mesh, split="mass")
+    ref = sx.run_serving(
+        st, plane, jnp.zeros((E, B), jnp.int32), jnp.asarray(keys),
+        jnp.ones((E, B), bool), aggregate=True, plane_search=True)
+    assert not np.asarray(out[4]).any()                  # no overflow
+    np.testing.assert_array_equal(np.asarray(out[2]),
+                                  np.asarray(ref[2]))
+    np.testing.assert_array_equal(np.asarray(out[3]),
+                                  np.asarray(ref[3]))
+    # the final carried plane holds every alive key exactly once
+    bot = np.asarray(out[1].keys)[-1]
+    alive = bot[bot != ssk.PAD_KEY]
+    np.testing.assert_array_equal(np.sort(alive), np.asarray(pool))
+
+
+def test_run_epoch_returns_spill_and_occupancy():
+    """The epoch tuple carries the routed exchange's feedback: a spill
+    counter and the per-shard occupancy vector, both zero (and the
+    occupancy a single pseudo-shard) everywhere off the routed sharded
+    plane-search path."""
     st = _seed_state(list(range(0, 80, 2)), cap=256)
     plane = dix.from_state_device(st, n_levels=12, width=126)
     B = 16
     out = sx.run_epoch(st, plane, jnp.zeros((B,), jnp.int32),
                        jnp.zeros((B,), jnp.int32), jnp.ones((B,), bool),
                        aggregate=True, plane_search=True)
-    assert len(out) == 6
+    assert len(out) == 7
     assert out[5].shape == () and int(out[5]) == 0
+    assert out[6].shape == (1,) and int(out[6][0]) == 0
+    sout = sx.run_serving(st, plane, jnp.zeros((2, B), jnp.int32),
+                          jnp.zeros((2, B), jnp.int32),
+                          jnp.ones((2, B), bool),
+                          aggregate=True, plane_search=True)
+    assert len(sout) == 7
+    assert sout[5].shape == (2,) and sout[6].shape == (2, 1)
+    assert int(np.asarray(sout[6]).sum()) == 0
