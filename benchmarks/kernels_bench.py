@@ -32,6 +32,7 @@ import subprocess
 import sys
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -289,6 +290,57 @@ def _sharded_search_case(width: int, nq: int) -> dict:
     return out
 
 
+def _pipelined_case(width: int, nq: int, qb: int, reps: int) -> dict:
+    """§5.8 windowed-DMA descent vs the tiered row-streaming kernel on
+    the hot-Zipf batch (alpha=1.4): bit-identity on every output triple,
+    wall clock, and the streamed-bytes race — the pipelined kernel's own
+    fetch counter (rank-window tiles + block-level early exit) against
+    the tiered kernel's whole-row streaming model from
+    ``_bytes_model``."""
+    from repro.kernels import splay_search as ssk
+    alpha = 1.4
+    L, qs = _zipf_case(width, alpha, nq, seed=14)
+    lvk = jnp.asarray(L.keys)
+    rm = jnp.asarray(L.rank_map)
+    w = jnp.asarray(L.widths)
+    qsj = jnp.asarray(qs)
+    interp = not ops.on_tpu()
+    dt_tier = _time(lambda: ops.splay_search(
+        lvk, qsj, query_block=qb, rank_map=rm, widths=w,
+        sharded=False, pipelined=False), reps)
+    dt_pipe = _time(lambda: ssk.splay_search_pipelined(
+        lvk, qsj, query_block=qb, interpret=interp, rank_map=rm,
+        widths=w), reps)
+    out_t = ops.splay_search(lvk, qsj, query_block=qb, rank_map=rm,
+                             widths=w, sharded=False, pipelined=False)
+    f, r, lv, nb = ssk.splay_search_pipelined(
+        lvk, qsj, query_block=qb, interpret=interp, rank_map=rm,
+        widths=w)
+    for a, b in zip(out_t, (f, r, lv)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    q_blocks = max(nq // qb, 1)
+    live = int((np.asarray(w) > 0).sum())
+    tiered_bytes = q_blocks * live * 2 * width * 4
+    pipe_bytes = int(np.asarray(nb).sum())
+    reduction = tiered_bytes / max(pipe_bytes, 1)
+    emit(f"kernel_splay_search_pipelined_a{alpha}", dt_pipe / nq * 1e6,
+         f"tiered_us={dt_tier / nq * 1e6:.3f};"
+         f"streamed_mb={pipe_bytes / 2**20:.2f}"
+         f"(tiered_model={tiered_bytes / 2**20:.2f});"
+         f"bytes_reduction={reduction:.2f}")
+    return {
+        "alpha": alpha, "width": width, "nq": nq, "query_block": qb,
+        "live_levels": live,
+        "us_per_query_tiered": dt_tier / nq * 1e6,
+        "us_per_query_pipelined": dt_pipe / nq * 1e6,
+        "streamed_bytes_per_batch_tiered_model": tiered_bytes,
+        "streamed_bytes_per_batch_pipelined": pipe_bytes,
+        "bytes_reduction": reduction,
+        "bytes_per_block": [int(x) for x in np.asarray(nb)],
+        "bit_identical": True,
+    }
+
+
 def _drift_case(width: int, nq: int, epochs: int = 10) -> dict:
     """Routing-controller drift race (DESIGN.md §5.7): controller-on vs
     static-lanes vs static-mass through the three drift scenarios
@@ -350,11 +402,15 @@ def run(quick: bool = False) -> dict:
     qb = 256
     reps = 3 if quick else 5
 
+    # the execution-mode label follows the actual backend (the kernels
+    # run compiled on TPU, interpret elsewhere — see kernels/ops.on_tpu)
+    mode = ("compiled-" if ops.on_tpu() else "interpret-") \
+        + jax.default_backend()
     payload = {
         "bench": "kernels",
         "config": {"width": width, "nq": nq, "query_block": qb,
                    "alphas": list(ALPHAS), "quick": quick,
-                   "mode": "interpret-cpu"},
+                   "mode": mode},
         "zipf_search": [],
     }
     for alpha in ALPHAS:
@@ -412,6 +468,9 @@ def run(quick: bool = False) -> dict:
     # mesh's fixed per-collective overhead, or the ratio gate in CI
     # measures dispatch noise instead of the exchange)
     payload["search_sharded"] = _sharded_search_case(4096, 8192)
+    # §5.8 foresight-pipelined descent vs the tiered kernel, hot-Zipf
+    # acceptance point (the streamed-bytes reduction is gated in CI)
+    payload["search_pipelined"] = _pipelined_case(width, nq, qb, reps)
     # closed-loop routing controller through the drift scenarios
     # (DESIGN.md §5.7), also at the acceptance point — the recovery
     # bound (<=1% spill within K epochs of every transition) is gated

@@ -20,8 +20,10 @@ misses in cross-boundary gaps, forced capacity overflow (the spill
 path), a batch owned entirely by one shard, transient-empty rows, the
 all-empty plane, membership-churn epoch streams interleaving sharded
 refresh + sharded search, mass-weighted re-split epochs (segmented
-planes; boundary-table monotonicity checked each epoch), and the
-end-to-end sharded serving loop
+planes; boundary-table monotonicity checked each epoch), the §5.8
+pipelined descent inside both shard bodies (lanes + segmented planes,
+``RouteStats.assembled`` pinned 0 on the resident mass steady state
+and > 0 on stale planes), and the end-to-end sharded serving loop
 (``splaylist.run_serving(plane_search=True, mesh=...)``, lanes and mass
 splits).  Exits nonzero on any mismatch.
 
@@ -33,8 +35,10 @@ Zipf query batches and prints one JSON object (consumed by
 measurement is the routed all_to_all exchange (the default execution)
 and the payload gains the §5.6 routing-balance columns: spill
 count/rate, per-shard occupancy after routing, a Gini coefficient
-alongside ``routing_max_share``, and the same columns after a
-mass-weighted re-split.  Host-mesh timings measure collective and
+alongside ``routing_max_share``, the same columns after a
+mass-weighted re-split, and the §5.8 assemble-overhead columns
+(resident segmented descent vs the same plane with the residency bit
+cleared, plus both ``assembled`` counters).  Host-mesh timings measure collective and
 dispatch overhead, not accelerator scaling — the structural columns
 (per-shard resident bytes, wire per batch, routing balance) are the
 part that transfers to TPU.
@@ -126,6 +130,17 @@ def _search_all_ways(plane_r, plane_s, qs, mesh, spill_cap=None):
     _assert_triple(out_rt[:3], out_re, "routed-vs-replicated")
     _assert_triple(out_mk, out_re, "masked-vs-replicated")
     _assert_triple(out_ga, out_re, "gather-vs-replicated")
+    # §5.8 windowed-DMA descent inside both shard bodies: bit-identical
+    # to the tiered replicated answers on the same plane
+    out_pr = ssk.splay_search_sharded(plane_s, qs, mesh=mesh,
+                                      pipelined=True, return_stats=True)
+    out_pm = ssk.splay_search_sharded(plane_s, qs, mesh=mesh,
+                                      routed=False, pipelined=True)
+    _assert_triple(out_pr[:3], out_re, "pipelined-routed-vs-replicated")
+    _assert_triple(out_pm, out_re, "pipelined-masked-vs-replicated")
+    # lane-packed shard planes carry no §5.8 residency bit: every
+    # descent re-assembles its local sub-plane (counted per shard body)
+    assert int(out_rt[3].assembled) > 0, int(out_rt[3].assembled)
     if spill_cap is not None:
         out_sp = ssk.splay_search_sharded(plane_s, qs, mesh=mesh,
                                           capacity=spill_cap,
@@ -240,6 +255,16 @@ def run_parity() -> None:
         _assert_triple(out_rt[:3], out_re, "mass routed")
         _assert_triple(out_mk, out_re, "mass masked")
         _assert_triple(out_sp[:3], out_re, "mass forced-spill")
+        # §5.8 residency: the mass-split blocks ARE the local sub-plane
+        # — the steady-state routed descent must not re-assemble (the
+        # counted probe for the "no _assemble_device" acceptance), and
+        # the pipelined kernel must agree on the segmented plane too
+        assert int(out_rt[3].assembled) == 0, int(out_rt[3].assembled)
+        out_pp = ssk.splay_search_sharded(ps, qs, mesh=mesh,
+                                          pipelined=True,
+                                          return_stats=True)
+        _assert_triple(out_pp[:3], out_re, "mass routed pipelined")
+        assert int(out_pp[3].assembled) == 0
     # a lanes refresh repacks the segmented plane bit-identically
     pl_back, _ = dix.refresh_device_sharded(st, ps, max_new=48,
                                             mesh=mesh)
@@ -424,10 +449,17 @@ def run_bench(width: int = 4096, nq: int = 4096, reps: int = 4,
     pm_s, ovm = dix.refresh_device_sharded(st_syn, plane_s, max_new=64,
                                            mesh=mesh, split="mass")
     assert int(ovm) == 0
+    # the same segmented plane with the §5.8 residency bit cleared:
+    # every descent is forced back through the per-batch local-sub-plane
+    # re-assembly (the pre-§5.8 routed-body behaviour), isolating the
+    # assemble overhead on otherwise identical data
+    pm_stale = pm_s._replace(local_ok=jnp.zeros_like(pm_s.local_ok))
 
     variants = {
         "routed_mass": lambda: ssk.splay_search_sharded(
             pm_s, qsj, query_block=qb, mesh=mesh),
+        "routed_mass_stale": lambda: ssk.splay_search_sharded(
+            pm_stale, qsj, query_block=qb, mesh=mesh),
         "routed_lane": lambda: ssk.splay_search_sharded(
             plane_s, qsj, query_block=qb, mesh=mesh),
         "masked": lambda: ssk.splay_search_sharded(
@@ -448,6 +480,8 @@ def run_bench(width: int = 4096, nq: int = 4096, reps: int = 4,
     out_re = variants["replicated"]()
     _assert_triple(variants["routed_mass"](), out_re,
                    "bench routed-mass-vs-replicated")
+    _assert_triple(variants["routed_mass_stale"](), out_re,
+                   "bench routed-forced-assemble-vs-replicated")
     _assert_triple(variants["routed_lane"](), out_re,
                    "bench routed-lane-vs-replicated")
     _assert_triple(variants["masked"](), out_re,
@@ -530,6 +564,21 @@ def run_bench(width: int = 4096, nq: int = 4096, reps: int = 4,
         "routing_gini_mass": _gini(mocc),
         "spill_count_mass": int(mstats.spill),
         "spill_rate_mass": float(int(mstats.spill) / nq),
+    })
+
+    # §5.8 assemble-overhead columns: the resident segmented descent vs
+    # the forced per-batch re-assembly on the same plane/batch; the
+    # assembled counters are the structural (noise-free) half of the gate
+    _, _, _, sstats = ssk.splay_search_sharded(
+        pm_stale, qsj, query_block=qb, mesh=mesh, return_stats=True)
+    out.update({
+        "us_per_query_routed_resident": best["routed_mass"] / nq * 1e6,
+        "us_per_query_routed_forced_assemble":
+            best["routed_mass_stale"] / nq * 1e6,
+        "assemble_overhead_ratio":
+            best["routed_mass_stale"] / best["routed_mass"],
+        "assembled_resident": int(mstats.assembled),
+        "assembled_forced": int(sstats.assembled),
     })
     return out
 

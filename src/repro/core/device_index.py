@@ -85,6 +85,25 @@ class DeviceLevelArrays(NamedTuple):
     slots: jax.Array       # int32 [W], state slot of bottom-row key j
     #                        (-1 when unknown: refresh falls back to the
     #                        scatter path for the epoch and re-derives it)
+    bot_rank: jax.Array    # int32 [L, W], index of keys[r, j] in the
+    #                        bottom row (the search's hit short-circuit:
+    #                        a membership hit at (r, j) answers its
+    #                        bottom-row rank without descending further;
+    #                        pad lanes are unspecified and never read)
+    # --- segmented-provenance residency (DESIGN.md §5.8) --------------
+    # The §5.6 mass-split refresh materializes each shard's local
+    # [L, W/S] sub-plane; these fields keep its ingredients resident so
+    # the sharded search consumes keys/rank_map/bot_rank blocks AS the
+    # local sub-plane instead of re-deriving it per batch.  local_ok is
+    # the staleness bit: 1 only when keys/rank_map/bot_rank blocks are
+    # per-shard local sub-planes (set by refresh_device_sharded's mass
+    # split); every replicated builder/refresh resets it to 0, sending
+    # the search back to the per-batch assemble fallback.
+    local_bot: jax.Array      # int32 [W], shard's own sorted bottom
+    #                           segment (+INF padded within its block)
+    local_heights: jax.Array  # int32 [W], aligned splay heights
+    local_live: jax.Array     # int32 [W], 1 on live local_bot lanes
+    local_ok: jax.Array       # int32 [1], residency validity bit
 
     @property
     def n_levels(self) -> int:
@@ -138,9 +157,23 @@ def _assemble_device(keys_sorted: jax.Array, rel_h: jax.Array,
     rank_map = jnp.where(live, rank_live, pad_default[:, None])
     rank_map = rank_map.at[n_levels - 1].set(col)
 
+    # bottom rank rides the same compaction gather: keys_sorted IS the
+    # bottom row, so the member picked for lane (r, j) sits in the
+    # bottom row at its keys_sorted index — `take` itself.
+    bot_rank = jnp.where(live, take, widths[n_levels - 1])
+
     heights = jnp.where(alive, rel_h, 0).astype(jnp.int32)
-    return DeviceLevelArrays(keys=rows, widths=widths, heights=heights,
-                             rank_map=rank_map, slots=slots)
+    return DeviceLevelArrays(
+        keys=rows, widths=widths, heights=heights, rank_map=rank_map,
+        slots=slots, bot_rank=bot_rank,
+        # residency defaults: the assembled inputs are recorded as
+        # provenance, but the validity bit stays 0 — only the sharded
+        # mass-split refresh may promote a plane to resident (its blocks
+        # are then genuinely per-shard local sub-planes).
+        local_bot=keys_sorted.astype(jnp.int32),
+        local_heights=heights,
+        local_live=alive.astype(jnp.int32),
+        local_ok=jnp.zeros((1,), jnp.int32))
 
 
 @functools.partial(jax.jit, static_argnames=("n_levels",))
@@ -566,9 +599,15 @@ def _refresh_shard_body(st: sx.SplayState, prev: DeviceLevelArrays, *,
         s_seg = jnp.where(seg_live, jnp.take(slot_g, src), -1)
         local = _assemble_device(k_seg, h_seg, s_seg, n_levels)
         widths_g = jax.lax.psum(local.widths, axis)
-        plane = DeviceLevelArrays(
-            keys=local.keys, widths=widths_g, heights=local.heights,
-            rank_map=local.rank_map, slots=local.slots)
+        # keys/rank_map/bot_rank ARE this shard's local sub-plane here —
+        # record the segment they were assembled from and set the
+        # residency bit, so the sharded search consumes them directly
+        # instead of re-running _assemble_device per batch (§5.8).
+        plane = local._replace(
+            widths=widths_g,
+            local_bot=k_seg, local_heights=local.heights,
+            local_live=(k_seg != PAD_KEY).astype(jnp.int32),
+            local_ok=jnp.ones((1,), jnp.int32))
         return plane, overflow
 
     slots_own = pick(segs_s, col_g, jnp.int32(-1))     # own lanes only
@@ -621,9 +660,19 @@ def _refresh_shard_body(st: sx.SplayState, prev: DeviceLevelArrays, *,
 
     heights_own = jnp.where(k_own != PAD_KEY, hraw_own, 0).astype(jnp.int32)
 
-    plane = DeviceLevelArrays(keys=rows_own, widths=widths_g,
-                              heights=heights_own, rank_map=rank_own,
-                              slots=slots_own)
+    # bottom rank of own output lanes: `takes` already holds the global
+    # keys_g position of each member, which IS its packed bottom rank
+    bot_rank_own = jnp.where(live, takes, widths_g[n_levels - 1])
+
+    plane = DeviceLevelArrays(
+        keys=rows_own, widths=widths_g, heights=heights_own,
+        rank_map=rank_own, slots=slots_own, bot_rank=bot_rank_own,
+        # lanes split keeps the packed global layout: blocks of
+        # keys/rank_map are global-row columns, NOT local sub-planes,
+        # so residency stays invalid (the search assembles per batch)
+        local_bot=k_own, local_heights=heights_own,
+        local_live=(k_own != PAD_KEY).astype(jnp.int32),
+        local_ok=jnp.zeros((1,), jnp.int32))
     return plane, overflow
 
 

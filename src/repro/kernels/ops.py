@@ -17,7 +17,8 @@ def on_tpu() -> bool:
 
 
 def splay_search(level_keys, queries, query_block: int = 256,
-                 rank_map=None, widths=None, sharded=None):
+                 rank_map=None, widths=None, sharded=None,
+                 pipelined: bool = None):
     """Batched level-array search (see kernels/splay_search.py).  Queries
     of any length (the kernel wrapper pads to the block multiple and
     slices back).  ``level_keys`` may be a bare [L, W] matrix or an index
@@ -25,29 +26,33 @@ def splay_search(level_keys, queries, query_block: int = 256,
     precomputed rank_map/widths skip the on-the-fly window derivation.
     A concretely width-sharded plane dispatches to the sharded search
     (``sharded=None`` auto-detects; True/False force either path —
-    DESIGN.md §5.5)."""
+    DESIGN.md §5.5).  ``pipelined=None`` picks the §5.8 windowed-DMA
+    kernel exactly when compiling (TPU); True/False force it."""
     return ssk.splay_search(
         level_keys, queries, query_block=query_block,
         interpret=not on_tpu(), rank_map=rank_map, widths=widths,
-        sharded=sharded)
+        sharded=sharded, pipelined=pipelined)
 
 
 def splay_search_sharded(plane, queries, query_block: int = 256,
                          mesh=None, axis: str = "model",
                          routed: bool = True, capacity: int = None,
                          slack: float = ssk.DEFAULT_ROUTE_SLACK,
-                         return_stats: bool = False):
+                         return_stats: bool = False,
+                         pipelined: bool = None):
     """Width-sharded tiered search: by default the routed all_to_all
     query exchange — owner-bucketed blocks shipped to the shard owning
     their bottom-row rank window, O(q/S) kernel work per shard, spill
     to the replicate-and-mask trace past ``capacity`` (see
     kernels/splay_search.py, DESIGN.md §5.6; ``routed=False`` keeps the
     masked full-batch trace).  Falls back to the replicated path when
-    no mesh resolves or the width is indivisible."""
+    no mesh resolves or the width is indivisible.  ``pipelined`` as in
+    :func:`splay_search` (per-shard §5.8 descent)."""
     return ssk.splay_search_sharded(
         plane, queries, query_block=query_block,
         interpret=not on_tpu(), mesh=mesh, axis=axis, routed=routed,
-        capacity=capacity, slack=slack, return_stats=return_stats)
+        capacity=capacity, slack=slack, return_stats=return_stats,
+        pipelined=pipelined)
 
 
 def splay_search_full(level_keys, queries, query_block: int = 256):

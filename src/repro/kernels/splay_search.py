@@ -4,7 +4,7 @@ TPU adaptation of the paper's search phase (DESIGN.md §5): instead of
 pointer chasing, each splay level is a dense sorted row; a query block
 compares against rows top-down (row 0 = hottest).
 
-Two kernels live here:
+Three kernels live here:
 
 ``splay_search`` — the tiered pipeline (DESIGN.md §5.2).  Grid
 ``(query_blocks, n_levels)``; the level matrix and the rank map are tiled
@@ -23,6 +23,20 @@ nested), and a masked binary refinement locates it in O(log window)
 probes instead of O(W) compares.  The ``[lo, hi)`` window is carried
 across grid steps in VMEM scratch; ``found``/``level_found`` accumulate
 in revisited output blocks.
+
+``splay_search_pipelined`` — the foresight-pipelined descent (DESIGN.md
+§5.8): operands stay in HBM (``memory_space=ANY``) and the kernel
+double-buffers manual ``pltpu.make_async_copy`` tile fetches covering
+only the block's live ``[lo, hi)`` window union per level, launching
+the level-r+1 fetch before level-r's compute and suppressing every
+remaining row DMA once the whole block is resolved (membership hit, or
+a width-1 bottom-row window projection via the ``bot_rank`` companion).
+Bit-identical to the tiered kernel — which stays the interpret-mode
+oracle — while streaming O(window) instead of O(W) bytes per row, and
+0 bytes for rows below the block's resolution depth.  ``splay_search``
+takes ``pipelined=True/False/None`` (None: pipelined exactly when
+compiling) and the sharded paths thread the same flag through their
+per-shard descents.
 
 ``splay_search_full`` — the seed kernel, kept as the measured baseline:
 it declares the whole ``[n_levels, width]`` matrix as one constant block
@@ -61,6 +75,7 @@ and is all ``splay_search_full`` ever does.
 from __future__ import annotations
 
 import functools
+import math
 from typing import NamedTuple
 
 import jax
@@ -89,9 +104,19 @@ class RouteStats(NamedTuple):
     ``occupancy.sum() == q`` (every real query has one owner;
     batch-padding fill lanes are excluded from the exchange).  On
     the no-mesh replicated fallback ``spill`` is 0 and ``occupancy`` is
-    the single pseudo-shard's whole batch."""
+    the single pseudo-shard's whole batch.
+
+    ``assembled`` (int32 scalar, replicated): shards that re-derived
+    their local sub-plane through ``_assemble_device`` this batch — the
+    §5.8 residency probe.  0 means the batch consumed the resident
+    segmented sub-plane end to end (the steady state after a mass-split
+    refresh); ``S`` means every shard paid the per-batch re-layering
+    (stale residency: a replicated build/refresh touched the plane, or
+    a lanes-split layout).  The no-mesh fallback reports 0 (there is no
+    sub-plane to assemble)."""
     spill: jax.Array
     occupancy: jax.Array
+    assembled: jax.Array
 
 
 def _is_concrete(x) -> bool:
@@ -152,6 +177,72 @@ def rank_windows(level_keys):
 def row_widths(level_keys):
     """Live entries per row (rows are +INF padded)."""
     return jnp.sum(level_keys != PAD_KEY, axis=1).astype(jnp.int32)
+
+
+def bottom_ranks(level_keys):
+    """bot_rank[r, j] = index of level_keys[r, j] in the bottom row —
+    the pipelined descent's hit short-circuit companion (DESIGN.md
+    §5.8): a membership hit at (r, j) answers its bottom-row rank
+    immediately, so a block whose every query has resolved stops
+    fetching rows.  Identity on the bottom row; pad lanes map to the
+    bottom live width (never read on hits).  The jnp fallback for
+    bare-matrix callers — both plane builders precompute it (device
+    planes carry it as ``DeviceLevelArrays.bot_rank``).  Assumes a
+    packed sorted bottom row (the same invariant as
+    :func:`rank_windows`)."""
+    n_levels, width = level_keys.shape
+    ident = jnp.arange(width, dtype=jnp.int32)[None, :]
+    if n_levels == 1:
+        return ident
+    bottom = level_keys[n_levels - 1]
+    br = jax.vmap(
+        lambda row: jnp.searchsorted(bottom, row, side="left"))(
+            level_keys[:-1])
+    return jnp.concatenate([br.astype(jnp.int32), ident], axis=0)
+
+
+def _check_query_block(query_block, nq):
+    """The query block must be a positive int: it is the Pallas block
+    length, and the wrappers pad the batch up to its multiple — a bad
+    value surfaces here as a ValueError instead of a downstream
+    BlockSpec shape error."""
+    if not isinstance(query_block, int) or isinstance(query_block, bool):
+        raise ValueError(
+            f"query_block must be an int, got {type(query_block).__name__}")
+    if query_block < 1:
+        raise ValueError(
+            f"query_block must be >= 1, got {query_block}")
+    padded = nq + ((-nq) % query_block)
+    if padded % query_block:            # unreachable by construction
+        raise ValueError(
+            f"query_block={query_block} does not divide the padded "
+            f"batch {padded} (batch {nq})")
+
+
+def _as_device_plane(plane):
+    """Normalize an index plane struct to the full ``DeviceLevelArrays``
+    pytree the sharded shard_maps expect: host ``LevelArrays`` (no slot
+    map, no residency set) get jnp fields, an unknown (-1) slot map, a
+    derived :func:`bottom_ranks` companion, and *stale* residency — the
+    per-batch assemble fallback stays their execution path."""
+    if hasattr(plane, "local_ok"):
+        return plane
+    from repro.core import device_index as dix
+    keys = jnp.asarray(plane.keys, jnp.int32)
+    n_levels, width = keys.shape
+    heights = jnp.asarray(plane.heights, jnp.int32)
+    bot = keys[n_levels - 1]
+    return dix.DeviceLevelArrays(
+        keys=keys,
+        widths=jnp.asarray(plane.widths, jnp.int32),
+        heights=heights,
+        rank_map=jnp.asarray(plane.rank_map, jnp.int32),
+        slots=jnp.full((width,), -1, jnp.int32),
+        bot_rank=bottom_ranks(keys),
+        local_bot=bot,
+        local_heights=heights,
+        local_live=(bot != PAD_KEY).astype(jnp.int32),
+        local_ok=jnp.zeros((1,), jnp.int32))
 
 
 def _fetch_schedule(widths, n_levels):
@@ -227,7 +318,8 @@ def _kernel_tiered(fetch_ref, widths_ref, q_ref, row_ref, rm_ref,
 
 def splay_search(level_keys, queries, query_block: int =
                  DEFAULT_QUERY_BLOCK, interpret: bool = True,
-                 rank_map=None, widths=None, sharded=None):
+                 rank_map=None, widths=None, sharded=None,
+                 pipelined: bool = None):
     """Tiered batched search.  level_keys: int32 [n_levels, width]
     (sorted rows, +INF padded, nested) — or an index plane struct
     (``DeviceLevelArrays``/``LevelArrays``), whose rank_map/widths are
@@ -245,7 +337,16 @@ def splay_search(level_keys, queries, query_block: int =
     ``sharded=False`` forces the legacy gather-to-replicated execution
     (the single-device kernel on the gathered plane) — the seam the
     parity tests pin.  Replicated execution constrains the query batch
-    to the ``"batch"`` logical axis when a mesh is active."""
+    to the ``"batch"`` logical axis when a mesh is active.
+
+    ``pipelined`` picks the descent kernel (DESIGN.md §5.8): ``True``
+    the foresight-pipelined windowed-DMA kernel, ``False`` the tiered
+    per-row stream, ``None`` (default) backend-adaptive — pipelined
+    exactly when compiling (``not interpret``), so interpret-mode runs
+    keep the tiered kernel as the oracle.  Answers are bit-identical
+    either way (asserted in ``tests/test_pipelined_search.py``)."""
+    nq = jnp.asarray(queries).shape[0]
+    _check_query_block(query_block, nq)
     if hasattr(level_keys, "rank_map"):        # index plane struct
         plane = level_keys
         if sharded is None:
@@ -253,14 +354,29 @@ def splay_search(level_keys, queries, query_block: int =
         if sharded:
             return splay_search_sharded(plane, queries,
                                         query_block=query_block,
-                                        interpret=interpret)
+                                        interpret=interpret,
+                                        pipelined=pipelined)
         level_keys = _replicated(jnp.asarray(plane.keys))
         _reject_segmented(level_keys)
         if rank_map is None:
             rank_map = _replicated(jnp.asarray(plane.rank_map))
         if widths is None:
             widths = _replicated(jnp.asarray(plane.widths))
+        if hasattr(plane, "bot_rank"):
+            bot_rank = _replicated(jnp.asarray(plane.bot_rank))
+        else:
+            bot_rank = None
+    else:
+        bot_rank = None
     queries = shd.constrain(jnp.asarray(queries), "batch")
+    if pipelined is None:
+        pipelined = not interpret
+    if pipelined:
+        f, r, lv, _ = _splay_search_pipelined_arrays(
+            level_keys, queries, query_block=query_block,
+            interpret=interpret, rank_map=rank_map, widths=widths,
+            bot_rank=bot_rank)
+        return f, r, lv
     return _splay_search_arrays(level_keys, queries,
                                 query_block=query_block,
                                 interpret=interpret, rank_map=rank_map,
@@ -326,6 +442,307 @@ def _splay_search_arrays(level_keys, queries, query_block: int =
 
 
 # ---------------------------------------------------------------------------
+# pipelined kernel (DESIGN.md §5.8): foresight-windowed row DMA with
+# block-level early exit.  The operands stay in HBM (memory_space=ANY);
+# the kernel itself double-buffers manual async tile copies covering
+# only the block's live [lo, hi) window union at each level, issues the
+# level-r+1 fetch before computing level r (the rank map bounds the next
+# window union from the predecessors already in hand — the "foresight"
+# of the skiplist prefetching literature), and stops fetching entirely
+# once every query in the block is resolved.  Resolution = membership
+# hit (bot_rank answers the bottom rank at hit time) OR a width-1
+# bottom-row window projection (the predecessor rank is pinned) — so
+# hot-key batches resolve in the top rows and never stream the wide
+# bottom rows at all.  Bit-identical to the tiered kernel by
+# construction (same windows while unresolved; same rank/level algebra).
+# ---------------------------------------------------------------------------
+
+# Tile length of the windowed copies: the largest divisor of width that
+# is <= 256 (so tile boundaries always land in bounds without clamping
+# arithmetic inside the DMA descriptor).  A width whose tile count
+# exceeds _MAX_PIPE_TILES (pathological: large prime widths) falls back
+# to the tiered stream rather than unrolling hundreds of per-tile
+# copies.
+_MAX_PIPE_TILES = 64
+
+
+def _kernel_pipelined(widths_ref, q_ref, keys_hbm, rm_hbm, br_hbm,
+                      found_ref, rank_ref, level_ref, bytes_ref,
+                      kbuf, rmbuf, brbuf, sem, *,
+                      n_levels: int, width: int, n_steps: int,
+                      tile: int, max_tiles: int, n_live: int,
+                      query_block: int):
+    i = pl.program_id(0)
+    q = q_ref[...]                                     # [QB]
+    qb = q.shape[0]
+    gidx = (i * query_block
+            + jax.lax.broadcasted_iota(jnp.int32, (qb, 1), 0)[:, 0])
+    is_pad = gidx >= n_live                            # batch padding
+
+    w0 = widths_ref[0]
+    bot_w = widths_ref[n_levels - 1]
+
+    lo = jnp.where(is_pad, 0, -1)
+    hi = jnp.where(is_pad, 0, w0)
+    found = jnp.zeros((qb,), jnp.bool_)
+    rank = jnp.zeros((qb,), jnp.int32)
+    level = jnp.full((qb,), n_levels, jnp.int32)
+    resolved = is_pad
+    done = jnp.all(resolved)
+
+    def union_window(lo_, hi_, res):
+        # union [ulo, uhi) of the unresolved lanes' windows (resolved
+        # lanes are frozen at (0, 0) and masked out here)
+        ulo = jnp.min(jnp.where(res, jnp.int32(width), lo_))
+        uhi = jnp.max(jnp.where(res, jnp.int32(0), hi_))
+        return ulo, uhi
+
+    def cover(l, h):
+        # tile-aligned buffer cover [base, base + nt*tile): row reads
+        # reach index min(h, width-1) at most (probes stay below hi,
+        # the rank/bot companions are read at p+1 <= hi)
+        base = (jnp.clip(l, 0, width - 1) // tile) * tile
+        end = jnp.clip(h, 0, width - 1)
+        nt = jnp.maximum(-((base - (end + 1)) // tile), 1)
+        return base, nt
+
+    def copies(r, slot, base, k):
+        off = base + k * tile
+        return [
+            pltpu.make_async_copy(
+                src.at[r, pl.ds(off, tile)],
+                dst.at[slot, pl.ds(k * tile, tile)],
+                sem.at[slot, a, k])
+            for a, (src, dst) in enumerate(
+                ((keys_hbm, kbuf), (rm_hbm, rmbuf), (br_hbm, brbuf)))
+        ]
+
+    # prologue: row 0's cover into buffer slot 0
+    ulo0, uhi0 = union_window(lo, hi, resolved)
+    base0, nt0 = cover(ulo0, uhi0)
+    for k in range(max_tiles):
+        @pl.when(~done & (k < nt0))
+        def _start0(k=k):
+            for c in copies(0, 0, base0, k):
+                c.start()
+    fetched = jnp.where(done, 0, 3 * nt0 * tile)
+
+    def body(r, carry):
+        (lo, hi, found, rank, level, resolved, done,
+         inflight, base_c, nt_c, fetched) = carry
+        slot = jax.lax.rem(r, 2)
+
+        # ---- wait row r's tiles (issued at r-1 / the prologue).  Gated
+        # by the *issue-time* predicate, not `done`: an early exit still
+        # drains the one speculative in-flight row.
+        for k in range(max_tiles):
+            @pl.when(inflight & (k < nt_c))
+            def _wait(k=k):
+                for c in copies(r, slot, base_c, k):
+                    c.wait()
+
+        run = ~done
+        w_r = widths_ref[r]
+        next_w = widths_ref[jnp.minimum(r + 1, n_levels - 1)]
+
+        def bidx(pos):
+            # row position -> buffer lane.  Out-of-cover positions only
+            # occur on resolved/masked lanes; the clip keeps them in
+            # bounds (the values are never consumed).
+            return jnp.clip(pos - base_c, 0, width - 1)
+
+        # ---- foresight: bound row r+1's window union through row r's
+        # rank-map tiles and launch its fetch BEFORE computing row r —
+        # the copy overlaps the binary refinement below.  The bound is
+        # conservative (pre-compute unresolved set, monotone rank map),
+        # so the next cover always contains the post-compute windows.
+        rm_row = rmbuf[slot, :]
+        ulo, uhi = union_window(lo, hi, resolved)
+        l1 = jnp.where(ulo < 0, jnp.int32(-1),
+                       jnp.take(rm_row,
+                                bidx(jnp.clip(ulo, 0, width - 1))))
+        h1 = jnp.where((uhi >= width) | (w_r == 0), next_w,
+                       jnp.take(rm_row,
+                                bidx(jnp.clip(uhi, 0, width - 1))))
+        base_n, nt_n = cover(l1, h1)
+        want = run & (r < n_levels - 1)
+        slot_n = jax.lax.rem(r + 1, 2)
+        for k in range(max_tiles):
+            @pl.when(want & (k < nt_n))
+            def _start(k=k):
+                for c in copies(r + 1, slot_n, base_n, k):
+                    c.start()
+        fetched = fetched + jnp.where(want, 3 * nt_n * tile, 0)
+
+        # ---- compute row r on the buffered tiles ----------------------
+        def do_row(_):
+            row = kbuf[slot, :]
+            br_row = brbuf[slot, :]
+
+            def step(_, c):
+                lo_, hi_ = c
+                active = hi_ - lo_ > 1
+                mid = (lo_ + hi_) // 2
+                vals = jnp.take(row, bidx(jnp.clip(mid, 0, width - 1)))
+                le = vals <= q
+                return (jnp.where(active & le, mid, lo_),
+                        jnp.where(active & ~le, mid, hi_))
+
+            p, _ = jax.lax.fori_loop(0, n_steps, step, (lo, hi))
+            pc = bidx(jnp.clip(p, 0, width - 1))
+            pc1 = bidx(jnp.clip(p + 1, 0, width - 1))
+            pred = jnp.take(row, pc)
+            hit = (p >= 0) & (pred == q)
+            # bottom-row projection of the predecessor gap: once it has
+            # width 1, the bottom rank is pinned at bl and the lane is
+            # resolved without descending further (§5.8); a hit pins it
+            # too (bl = bot_rank of the hit key).
+            bl = jnp.where(p >= 0, jnp.take(br_row, pc), -1)
+            bh = jnp.where((p + 1 >= width) | (w_r == 0), bot_w,
+                           jnp.take(br_row, pc1))
+            lo_n = jnp.where(p >= 0, jnp.take(rm_row, pc), -1)
+            hi_n = jnp.where((p + 1 >= width) | (w_r == 0), next_w,
+                             jnp.take(rm_row, pc1))
+            return hit, bl, bh, lo_n, hi_n
+
+        def skip_row(_):
+            z = jnp.zeros((qb,), jnp.int32)
+            return jnp.zeros((qb,), jnp.bool_), z, z, z, z
+
+        hit, bl, bh, lo_n, hi_n = jax.lax.cond(run, do_row, skip_row,
+                                               operand=None)
+        hitn = hit & ~resolved
+        pinned = run & ~hit & ~resolved & (bh - bl == 1)
+        level = jnp.where(hitn, r, level)
+        rank = jnp.where(hitn | pinned, bl, rank)
+        found = found | hitn
+        resolved = resolved | hitn | pinned
+        lo = jnp.where(resolved, 0, lo_n)
+        hi = jnp.where(resolved, 0, hi_n)
+        done = done | jnp.all(resolved)
+        return (lo, hi, found, rank, level, resolved, done,
+                want, base_n, nt_n, fetched)
+
+    carry = (lo, hi, found, rank, level, resolved, done,
+             ~done, base0, nt0, fetched)
+    carry = jax.lax.fori_loop(0, n_levels, body, carry)
+    (lo, hi, found, rank, level, resolved, done,
+     inflight, base_c, nt_c, fetched) = carry
+    found_ref[...] = found
+    rank_ref[...] = rank
+    level_ref[...] = level
+    bytes_ref[...] = jnp.full((1,), fetched * 4, jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("query_block", "interpret"))
+def _splay_search_pipelined_arrays(level_keys, queries, query_block: int =
+                                   DEFAULT_QUERY_BLOCK,
+                                   interpret: bool = True, rank_map=None,
+                                   widths=None, bot_rank=None):
+    n_levels, width = level_keys.shape
+    nq = queries.shape[0]
+    if nq == 0:
+        z = jnp.zeros((0,), jnp.int32)
+        return jnp.zeros((0,), jnp.bool_), z, z, z
+    if rank_map is None:
+        rank_map = rank_windows(level_keys)
+    if widths is None:
+        widths = row_widths(level_keys)
+    if bot_rank is None:
+        bot_rank = bottom_ranks(level_keys)
+    pad = (-nq) % query_block
+    nq_p = nq + pad
+    n_blocks = nq_p // query_block
+    tile = math.gcd(width, 256)
+    max_tiles = width // tile
+    if max_tiles > _MAX_PIPE_TILES:
+        # pathological width (no divisor near 256): the per-tile copy
+        # unroll would dominate — take the tiered stream and report its
+        # whole-row byte model (keys + rank map rows, 4 bytes a lane)
+        f, r, lv = _splay_search_arrays(
+            level_keys, queries, query_block=query_block,
+            interpret=interpret, rank_map=rank_map, widths=widths)
+        return f, r, lv, jnp.full((n_blocks,), 2 * n_levels * width * 4,
+                                  jnp.int32)
+    if pad:
+        queries = jnp.pad(queries, (0, pad), constant_values=PAD_KEY - 1)
+    n_steps = max(int(width + 1).bit_length(), 1)
+    kernel = functools.partial(
+        _kernel_pipelined, n_levels=n_levels, width=width,
+        n_steps=n_steps, tile=tile, max_tiles=max_tiles, n_live=nq,
+        query_block=query_block)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((query_block,), lambda i, w: (i,)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=(
+            pl.BlockSpec((query_block,), lambda i, w: (i,)),
+            pl.BlockSpec((query_block,), lambda i, w: (i,)),
+            pl.BlockSpec((query_block,), lambda i, w: (i,)),
+            pl.BlockSpec((1,), lambda i, w: (i,)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((2, width), jnp.int32),         # key tiles
+            pltpu.VMEM((2, width), jnp.int32),         # rank-map tiles
+            pltpu.VMEM((2, width), jnp.int32),         # bot-rank tiles
+            pltpu.SemaphoreType.DMA((2, 3, max_tiles)),
+        ],
+    )
+    out_shapes = (
+        jax.ShapeDtypeStruct((nq_p,), jnp.bool_),
+        jax.ShapeDtypeStruct((nq_p,), jnp.int32),
+        jax.ShapeDtypeStruct((nq_p,), jnp.int32),
+        jax.ShapeDtypeStruct((n_blocks,), jnp.int32),
+    )
+    found, rank, lvl, nbytes = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(widths, queries, jnp.asarray(level_keys, jnp.int32),
+      jnp.asarray(rank_map, jnp.int32), jnp.asarray(bot_rank, jnp.int32))
+    return found[:nq], rank[:nq], lvl[:nq], nbytes
+
+
+def splay_search_pipelined(level_keys, queries, query_block: int =
+                           DEFAULT_QUERY_BLOCK, interpret: bool = True,
+                           rank_map=None, widths=None, bot_rank=None):
+    """Foresight-pipelined batched search (DESIGN.md §5.8): same answer
+    triple as :func:`splay_search`, plus the per-block streamed-bytes
+    counter the windowed-DMA pipeline actually paid — ``(found [q],
+    rank [q], level_found [q], bytes [q_blocks] int32)``.  Accepts a
+    bare matrix or an index plane struct (whose precomputed
+    ``rank_map``/``widths``/``bot_rank`` companions ride along).
+    Bit-identical to the tiered kernel on every packed plane; the
+    tiered path remains the interpret-mode oracle the parity tests pin
+    this against.  Widths with no divisor <= 256 within a 64-tile
+    budget fall back to the tiered stream (bytes then report its
+    whole-row model)."""
+    if hasattr(level_keys, "rank_map"):        # index plane struct
+        plane = level_keys
+        level_keys = _replicated(jnp.asarray(plane.keys))
+        _reject_segmented(level_keys)
+        if rank_map is None:
+            rank_map = _replicated(jnp.asarray(plane.rank_map))
+        if widths is None:
+            widths = _replicated(jnp.asarray(plane.widths))
+        if bot_rank is None and hasattr(plane, "bot_rank"):
+            bot_rank = _replicated(jnp.asarray(plane.bot_rank))
+    queries = jnp.asarray(queries)
+    _check_query_block(query_block, queries.shape[0])
+    queries = shd.constrain(queries, "batch")
+    return _splay_search_pipelined_arrays(
+        level_keys, queries, query_block=query_block, interpret=interpret,
+        rank_map=rank_map, widths=widths, bot_rank=bot_rank)
+
+
+# ---------------------------------------------------------------------------
 # width-sharded execution (DESIGN.md §5.5–§5.6): ownership routing +
 # per-shard tiered descent on locally-assembled sub-planes.  Default is
 # the routed all_to_all query exchange; the replicate-and-mask trace is
@@ -378,8 +795,63 @@ def _owner_of(bounds, queries):
             .astype(jnp.int32) - 1)                    # in [0, S-1]
 
 
+def _descend_local(local, queries, *, query_block: int, interpret: bool,
+                   pipelined: bool):
+    """One local tiered descent over a shard's [L, W/S] sub-plane —
+    through the §5.8 foresight-pipelined kernel when ``pipelined``
+    (same answers; the per-block byte counter is dropped here), else
+    the tiered stream (the interpret-mode oracle)."""
+    if pipelined:
+        f, r, lv, _ = _splay_search_pipelined_arrays(
+            local.keys, queries, query_block=query_block,
+            interpret=interpret, rank_map=local.rank_map,
+            widths=local.widths, bot_rank=local.bot_rank)
+        return f, r, lv
+    return _splay_search_arrays(
+        local.keys, queries, query_block=query_block,
+        interpret=interpret, rank_map=local.rank_map,
+        widths=local.widths)
+
+
+def _local_subplane(plane, *, n_levels: int):
+    """The shard's local [L, W/S] sub-plane (runs under ``shard_map``;
+    ``plane`` leaves are this shard's blocks).  The one shared entry to
+    local re-layering — both sharded search bodies go through here.
+
+    Resident fast path (DESIGN.md §5.8): when the residency bit
+    ``local_ok`` is set (only the mass-split refresh sets it), the
+    plane's keys/rank_map/bot_rank blocks already ARE the per-shard
+    local sub-plane — the only global field is ``widths``, re-derived
+    from the resident provenance by one mask-sum.  Stale residency
+    (any replicated build/refresh, lanes-split layout, host plane)
+    re-layers the provenance blocks through ``_assemble_device`` per
+    batch — the pre-§5.8 behavior, kept as the fallback.
+
+    Returns ``(local_plane, assembled)`` with ``assembled`` an int32
+    0/1 flag — the counted probe behind ``RouteStats.assembled``."""
+    from repro.core import device_index as dix
+    wl = plane.local_bot.shape[0]
+
+    def resident(p_):
+        row_min_h = (n_levels - 1
+                     - jnp.arange(n_levels, dtype=jnp.int32))
+        live = (p_.local_live > 0)[None, :]
+        lw = jnp.sum(live & (p_.local_heights[None, :]
+                             >= row_min_h[:, None]),
+                     axis=1).astype(jnp.int32)
+        return p_._replace(widths=lw), jnp.int32(0)
+
+    def assemble(p_):
+        return (dix._assemble_device(
+                    p_.local_bot, p_.local_heights,
+                    jnp.full((wl,), -1, jnp.int32), n_levels),
+                jnp.int32(1))
+
+    return jax.lax.cond(plane.local_ok[0] > 0, resident, assemble, plane)
+
+
 def _masked_descent(local, bounds, lift, queries, *, axis: str,
-                    query_block: int, interpret: bool):
+                    query_block: int, interpret: bool, pipelined: bool):
     """The replicate-and-mask trace (the PR-4 §5.5 execution, now the
     spill target): every shard descends the FULL (replicated) query
     batch on its local sub-plane, masks the lanes it does not own, and
@@ -388,10 +860,8 @@ def _masked_descent(local, bounds, lift, queries, *, axis: str,
     — but any query answers correctly here, capacity-free."""
     owner = _owner_of(bounds, queries)
     mine = owner == jax.lax.axis_index(axis).astype(jnp.int32)
-    f, r, lv = _splay_search_arrays(
-        local.keys, queries, query_block=query_block,
-        interpret=interpret, rank_map=local.rank_map,
-        widths=local.widths)
+    f, r, lv = _descend_local(local, queries, query_block=query_block,
+                              interpret=interpret, pipelined=pipelined)
     rank_g = jnp.where(r >= 0, r + lift, -1)
     stacked = jnp.where(mine[None, :],
                         jnp.stack([f.astype(jnp.int32), rank_g, lv]),
@@ -400,11 +870,12 @@ def _masked_descent(local, bounds, lift, queries, *, axis: str,
     return f_o > 0, r_o, l_o
 
 
-def _search_shard_body(bot, hts, queries, *, axis: str, n_levels: int,
-                       query_block: int, interpret: bool):
+def _search_shard_body(plane, queries, *, axis: str, n_levels: int,
+                       query_block: int, interpret: bool,
+                       pipelined: bool):
     """Per-shard body of the ``routed=False`` path (runs under
-    ``shard_map``; ``bot``/``hts`` are this shard's bottom-row/heights
-    blocks, queries are replicated).  Three stages:
+    ``shard_map``; ``plane`` leaves are this shard's blocks, queries
+    are replicated).  Three stages:
 
       1. *routing* — the §5.4 range-boundary table
          (:func:`_route_tables`) and one sharded ``searchsorted``
@@ -416,36 +887,37 @@ def _search_shard_body(bot, hts, queries, *, axis: str, n_levels: int,
          against the local −∞/+∞ sentinels instead (the true
          predecessor left of the boundary, when there is one, is by
          construction not the bottom-row answer of an owned query).
-      2. *local descent* — the shard re-layers its own (bottom block,
-         heights block) into an [L, W/S] sub-plane (same mask/prefix-sum
-         pass as the refresh; rows of the sub-plane are the shard's key
-         range restricted to each level, so row membership — and hence
-         ``level_found`` — matches the global plane exactly) and runs
-         the unmodified tiered kernel on it.  O((L·W/S)·log W) assembly
-         amortized over the query batch; resident footprint O(L·W/S).
+      2. *local descent* — the shard's [L, W/S] sub-plane comes from
+         :func:`_local_subplane`: resident (one mask-sum) on a
+         mass-split plane, else re-layered per batch (same
+         mask/prefix-sum pass as the refresh; rows of the sub-plane are
+         the shard's key range restricted to each level, so row
+         membership — and hence ``level_found`` — matches the global
+         plane exactly); the tiered (or §5.8 pipelined) kernel runs on
+         it.  Resident footprint O(L·W/S).
       3. *composition* — local ranks lift to packed-global by the
          shard's live-lane prefix (:func:`_route_tables`), and ONE
          stacked ``[3, q]`` ``psum`` (masked to each query's owner)
          emits found/rank/level.
 
-    Wire per batch: two scalar all_gathers + one [3, q] psum —
-    independent of W (the refresh's collectives are O(W); the search
-    adds only O(q))."""
-    from repro.core import device_index as dix
-    wl = bot.shape[0]
+    Wire per batch: two scalar all_gathers + one [3, q] psum (plus the
+    scalar ``assembled`` psum) — independent of W (the refresh's
+    collectives are O(W); the search adds only O(q))."""
+    bot = plane.keys[n_levels - 1]
     bounds, lifts = _route_tables(bot, axis)
     lift = lifts[jax.lax.axis_index(axis).astype(jnp.int32)]
-    local = dix._assemble_device(
-        bot, hts, jnp.full((wl,), -1, jnp.int32), n_levels)
-    return _masked_descent(local, bounds, lift, queries, axis=axis,
-                           query_block=query_block, interpret=interpret)
+    local, assembled = _local_subplane(plane, n_levels=n_levels)
+    f, r, lv = _masked_descent(local, bounds, lift, queries, axis=axis,
+                               query_block=query_block,
+                               interpret=interpret, pipelined=pipelined)
+    return f, r, lv, jax.lax.psum(assembled, axis)
 
 
-def _routed_shard_body(bot, hts, q_loc, *, axis: str, n_shards: int,
+def _routed_shard_body(plane, q_loc, *, axis: str, n_shards: int,
                        n_levels: int, capacity: int, query_block: int,
-                       interpret: bool, n_live: int):
+                       interpret: bool, n_live: int, pipelined: bool):
     """Per-shard body of the routed query exchange (DESIGN.md §5.6;
-    runs under ``shard_map``; ``bot``/``hts`` are this shard's blocks,
+    runs under ``shard_map``; ``plane`` leaves are this shard's blocks,
     ``q_loc`` is its ``[q/S]`` slice of the batch-sharded queries).
 
       1. *bucket* — route the local slice by the boundary table, then
@@ -477,17 +949,15 @@ def _routed_shard_body(bot, hts, q_loc, *, axis: str, n_shards: int,
     O(q·slack), W-independent; the full-batch all_gather is paid only
     on spill epochs.  Per-shard kernel compute drops from O(q·L·log
     (W/S)) to O((q/S)·slack·L·log(W/S)) — the §5.6 point."""
-    from repro.core import device_index as dix
     S = n_shards
-    wl = bot.shape[0]
     qs = q_loc.shape[0]
     ax = jax.lax.axis_index(axis).astype(jnp.int32)
     fill = jnp.int32(PAD_KEY - 1)                      # inert query value
 
+    bot = plane.keys[n_levels - 1]
     bounds, lifts = _route_tables(bot, axis)
     lift = lifts[ax]
-    local = dix._assemble_device(
-        bot, hts, jnp.full((wl,), -1, jnp.int32), n_levels)
+    local, assembled = _local_subplane(plane, n_levels=n_levels)
 
     # ---- 1. owner-bucket the local slice.  Batch-padding fill lanes
     # (global index >= n_live, appended by the wrapper when q % S != 0)
@@ -531,9 +1001,8 @@ def _routed_shard_body(bot, hts, q_loc, *, axis: str, n_shards: int,
                    fill)                               # [cap] kernel batch
 
     # ---- 3. the tiered descent over the compacted O(q/S) block -----------
-    f, r, lv = _splay_search_arrays(
-        local.keys, kq, query_block=query_block, interpret=interpret,
-        rank_map=local.rank_map, widths=local.widths)
+    f, r, lv = _descend_local(local, kq, query_block=query_block,
+                              interpret=interpret, pipelined=pipelined)
     rank_g = jnp.where(r >= 0, r + lift, -1)
 
     # ---- 4. positional un-exchange ---------------------------------------
@@ -575,7 +1044,8 @@ def _routed_shard_body(bot, hts, q_loc, *, axis: str, n_shards: int,
         q_all = jax.lax.all_gather(q_loc, axis, tiled=True)  # [S*qs]
         fa, ra, la = _masked_descent(
             local, bounds, lift, q_all, axis=axis,
-            query_block=query_block, interpret=interpret)
+            query_block=query_block, interpret=interpret,
+            pipelined=pipelined)
         sl = lambda x: jax.lax.dynamic_slice(x, (ax * qs,), (qs,))
         return sl(fa), sl(ra), sl(la)
 
@@ -586,40 +1056,50 @@ def _routed_shard_body(bot, hts, q_loc, *, axis: str, n_shards: int,
     f_sp, r_sp, l_sp = jax.lax.cond(n_spill > 0, spill_path, no_spill,
                                     operand=None)
     return (jnp.where(ok, f_rt, f_sp), jnp.where(ok, r_rt, r_sp),
-            jnp.where(ok, l_rt, l_sp), n_spill, occupancy)
+            jnp.where(ok, l_rt, l_sp), n_spill, occupancy,
+            jax.lax.psum(assembled, axis))
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_search_fn(mesh, axis: str, n_levels: int, query_block: int,
-                       interpret: bool):
+                       interpret: bool, pipelined: bool):
     """Build (and cache) the jitted shard_map of the replicate-and-mask
-    path for one (mesh, axis, n_levels, query_block) cell — planes are
-    shape-stable, so serving reuses one entry per mesh."""
+    path for one (mesh, axis, n_levels, query_block, pipelined) cell —
+    planes are shape-stable, so serving reuses one entry per mesh.  The
+    plane enters as one pytree laid out by ``index_plane_specs`` (its
+    residency fields ride along for :func:`_local_subplane`)."""
+    from repro.core.device_index import DeviceLevelArrays
+    specs = shd.index_plane_specs(DeviceLevelArrays, axis)
     body = functools.partial(
         _search_shard_body, axis=axis, n_levels=n_levels,
-        query_block=query_block, interpret=interpret)
+        query_block=query_block, interpret=interpret,
+        pipelined=pipelined)
     fn = shd.shard_map_compat(body, mesh=mesh,
-                              in_specs=(P(axis), P(axis), P()),
-                              out_specs=(P(), P(), P()))
+                              in_specs=(specs, P()),
+                              out_specs=(P(), P(), P(), P()))
     return jax.jit(fn)
 
 
 @functools.lru_cache(maxsize=None)
 def _routed_search_fn(mesh, axis: str, n_levels: int, query_block: int,
-                      interpret: bool, capacity: int, n_live: int):
+                      interpret: bool, capacity: int, n_live: int,
+                      pipelined: bool):
     """Build (and cache) the jitted shard_map of the routed exchange for
-    one (mesh, axis, n_levels, query_block, capacity, n_live) cell.
-    Queries enter batch-sharded (``P(axis)``) and the answer triple
-    leaves batch-sharded; the spill count and occupancy vector are
-    replicated."""
+    one (mesh, axis, n_levels, query_block, capacity, n_live,
+    pipelined) cell.  The plane enters as one ``index_plane_specs``
+    pytree; queries enter batch-sharded (``P(axis)``) and the answer
+    triple leaves batch-sharded; the spill count, occupancy vector and
+    assembled count are replicated."""
+    from repro.core.device_index import DeviceLevelArrays
+    specs = shd.index_plane_specs(DeviceLevelArrays, axis)
     body = functools.partial(
         _routed_shard_body, axis=axis, n_shards=mesh.shape[axis],
         n_levels=n_levels, capacity=capacity, query_block=query_block,
-        interpret=interpret, n_live=n_live)
+        interpret=interpret, n_live=n_live, pipelined=pipelined)
     fn = shd.shard_map_compat(
         body, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis)),
-        out_specs=(P(axis), P(axis), P(axis), P(), P()))
+        in_specs=(specs, P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(), P(), P()))
     return jax.jit(fn)
 
 
@@ -658,7 +1138,8 @@ def splay_search_sharded(level_keys, queries, query_block: int =
                          mesh=None, axis: str = "model",
                          routed: bool = True, capacity: int = None,
                          slack: float = DEFAULT_ROUTE_SLACK,
-                         return_stats: bool = False):
+                         return_stats: bool = False,
+                         pipelined: bool = None):
     """Width-sharded tiered search (DESIGN.md §5.5–§5.6): the
     rank-windowed descent under ``shard_map`` over the ``splay_width``
     axis.  Each shard owns the contiguous key range of its plane
@@ -679,7 +1160,17 @@ def splay_search_sharded(level_keys, queries, query_block: int =
     :func:`route_capacity` = ``ceil(q/S) · slack``.  ``slack`` is the
     imbalance headroom (only read when ``capacity`` is None).
     ``return_stats=True`` appends a :class:`RouteStats` (spill count,
-    per-shard occupancy) to the returned triple.
+    per-shard occupancy, assembled-shard count) to the returned triple.
+    ``pipelined`` picks the per-shard descent kernel: the §5.8
+    foresight-pipelined one (``True``), the tiered stream (``False``),
+    or backend-adaptive (``None``, the default: pipelined exactly when
+    compiling — ``not interpret`` — so the tiered oracle stays the
+    interpret-mode reference).  Answers are bit-identical either way.
+
+    Local sub-planes come from :func:`_local_subplane`: resident on a
+    mass-split plane (``local_ok`` set — no per-batch
+    ``_assemble_device``), re-layered per batch otherwise; the
+    ``RouteStats.assembled`` counter reports which path ran.
 
     ``level_keys`` must be an index plane struct
     (``DeviceLevelArrays``/``LevelArrays``).  Mesh resolution: the
@@ -715,18 +1206,25 @@ def splay_search_sharded(level_keys, queries, query_block: int =
     if capacity is None and slack < 1.0:
         raise ValueError(
             f"splay_search_sharded: slack must be >= 1.0, got {slack}")
+    nq = jnp.asarray(queries).shape[0]
+    _check_query_block(query_block, nq)
+    if pipelined is None:
+        pipelined = not interpret
+    pipelined = bool(pipelined)
+    plane = _as_device_plane(plane)
     if mesh is None:
         mesh = shd.plane_width_mesh(plane, axis) or shd.active_mesh()
     n_levels, width = plane.keys.shape
-    nq = jnp.asarray(queries).shape[0]
     if (mesh is None or axis not in mesh.shape
             or width % mesh.shape[axis]):
         out = splay_search(plane, queries, query_block=query_block,
-                           interpret=interpret, sharded=False)
+                           interpret=interpret, sharded=False,
+                           pipelined=pipelined)
         if return_stats:
             return out + (RouteStats(
                 jnp.zeros((), jnp.int32),
-                jnp.full((1,), nq, jnp.int32)),)
+                jnp.full((1,), nq, jnp.int32),
+                jnp.zeros((), jnp.int32)),)
         return out
     S = mesh.shape[axis]
     queries = jnp.asarray(queries)
@@ -735,18 +1233,18 @@ def splay_search_sharded(level_keys, queries, query_block: int =
         out = (jnp.zeros((0,), jnp.bool_), z, z)
         if return_stats:
             return out + (RouteStats(jnp.zeros((), jnp.int32),
-                                     jnp.zeros((S,), jnp.int32)),)
+                                     jnp.zeros((S,), jnp.int32),
+                                     jnp.zeros((), jnp.int32)),)
         return out
-    bot = jnp.asarray(plane.keys)[n_levels - 1]
-    hts = jnp.asarray(plane.heights)
     if not routed:
         fn = _sharded_search_fn(mesh, axis, n_levels, query_block,
-                                interpret)
-        out = fn(bot, hts, queries)
+                                interpret, pipelined)
+        f, r, lv, assembled = fn(plane, queries)
+        out = (f, r, lv)
         if return_stats:
             return out + (RouteStats(
                 jnp.zeros((), jnp.int32),
-                jnp.full((S,), nq, jnp.int32)),)
+                jnp.full((S,), nq, jnp.int32), assembled),)
         return out
     qs = -(-nq // S)
     pad = qs * S - nq
@@ -760,11 +1258,11 @@ def splay_search_sharded(level_keys, queries, query_block: int =
         queries = jnp.pad(queries, (0, pad),
                           constant_values=PAD_KEY - 1)
     fn = _routed_search_fn(mesh, axis, n_levels, query_block, interpret,
-                           int(capacity), int(nq))
-    f, r, lv, spill, occ = fn(bot, hts, queries)
+                           int(capacity), int(nq), pipelined)
+    f, r, lv, spill, occ, assembled = fn(plane, queries)
     out = (f[:nq], r[:nq], lv[:nq])
     if return_stats:
-        return out + (RouteStats(spill, occ),)
+        return out + (RouteStats(spill, occ, assembled),)
     return out
 
 
@@ -829,7 +1327,9 @@ def splay_search_full(level_keys, queries, query_block: int =
     if hasattr(level_keys, "rank_map"):        # index plane struct
         level_keys = _replicated(jnp.asarray(level_keys.keys))
         _reject_segmented(level_keys)
-    queries = shd.constrain(jnp.asarray(queries), "batch")
+    queries = jnp.asarray(queries)
+    _check_query_block(query_block, queries.shape[0])
+    queries = shd.constrain(queries, "batch")
     return _splay_search_full_arrays(level_keys, queries,
                                      query_block=query_block,
                                      interpret=interpret)

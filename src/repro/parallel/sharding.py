@@ -196,25 +196,53 @@ def constrain_index_plane(plane):
     compilable on every mesh).  Callers that *require* the sharded
     layout (``device_index.refresh_device_sharded``) check divisibility
     themselves and fall back to the replicated refresh."""
-    return type(plane)(
-        keys=constrain(plane.keys, "splay_level", "splay_width"),
-        widths=constrain(plane.widths, "splay_level"),
-        heights=constrain(plane.heights, "splay_width"),
-        rank_map=constrain(plane.rank_map, "splay_level", "splay_width"),
-        slots=constrain(plane.slots, "splay_width"))
+    fields = {
+        "keys": constrain(plane.keys, "splay_level", "splay_width"),
+        "widths": constrain(plane.widths, "splay_level"),
+        "heights": constrain(plane.heights, "splay_width"),
+        "rank_map": constrain(plane.rank_map, "splay_level",
+                              "splay_width"),
+        "slots": constrain(plane.slots, "splay_width"),
+    }
+    if hasattr(plane, "local_ok"):     # DeviceLevelArrays residency set
+        fields.update(
+            bot_rank=constrain(plane.bot_rank, "splay_level",
+                               "splay_width"),
+            local_bot=constrain(plane.local_bot, "splay_width"),
+            local_heights=constrain(plane.local_heights, "splay_width"),
+            local_live=constrain(plane.local_live, "splay_width"),
+            local_ok=constrain(plane.local_ok))
+    return type(plane)(**fields)
+
+
+# spec of every known index-plane field on a width-sharded layout; the
+# builder below filters by the plane class's actual fields so the host
+# 4-field LevelArrays and the device 10-field DeviceLevelArrays both
+# resolve (DESIGN.md §5.8: the residency set rides the same layout —
+# local_* blocks are per-shard, the validity bit replicates)
+def _plane_field_specs(axis: str):
+    return {
+        "keys": P(None, axis), "widths": P(), "heights": P(axis),
+        "rank_map": P(None, axis), "slots": P(axis),
+        "bot_rank": P(None, axis),
+        "local_bot": P(axis), "local_heights": P(axis),
+        "local_live": P(axis), "local_ok": P(),
+    }
 
 
 def index_plane_specs(plane_cls, axis: str = "model"):
     """The ``PartitionSpec`` pytree of a width-sharded index plane, in
     the shape of ``plane_cls`` (``device_index.DeviceLevelArrays``):
-    ``keys``/``rank_map`` split their width (last) dimension over
-    ``axis``; ``heights``/``slots`` split their only dimension; the
-    per-level ``widths`` vector is replicated (every shard needs every
-    row's global live count).  This is the in/out contract of
-    ``device_index.refresh_device_sharded``'s ``shard_map``."""
-    return plane_cls(
-        keys=P(None, axis), widths=P(), heights=P(axis),
-        rank_map=P(None, axis), slots=P(axis))
+    ``keys``/``rank_map``/``bot_rank`` split their width (last)
+    dimension over ``axis``; ``heights``/``slots`` and the §5.8
+    residency companions ``local_bot``/``local_heights``/``local_live``
+    split their only dimension; the per-level ``widths`` vector and the
+    ``local_ok`` staleness bit are replicated (every shard needs every
+    row's global live count, and residency is a global verdict).  This
+    is the in/out contract of ``device_index.refresh_device_sharded``'s
+    and ``kernels.splay_search``'s sharded ``shard_map``s."""
+    by_field = _plane_field_specs(axis)
+    return plane_cls(**{f: by_field[f] for f in plane_cls._fields})
 
 
 def plane_width_mesh(plane, axis: str = "model") -> Optional[Mesh]:
