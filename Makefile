@@ -3,7 +3,8 @@
 PY ?= python
 export PYTHONPATH := src:.
 
-.PHONY: test bench-smoke bench bench-sharded-search bench-drift check-docs
+.PHONY: test bench-smoke bench bench-sharded-search bench-drift \
+	bench-serving check-docs
 
 # tier-1: the full pytest suite (ROADMAP "Tier-1 verify")
 test:
@@ -38,6 +39,18 @@ bench-sharded-search:
 # BENCH_kernels.json (via kernels_bench's drift_probe --bench subprocess).
 bench-drift:
 	$(PY) benchmarks/drift_probe.py --parity
+
+# serving-engine parity battery (DESIGN.md §5.9): device-indexed
+# serving (routed sharded search + route controller) bit-identical to
+# the host-SplayList pool on recorded request traces and end-to-end
+# engine runs, meshless and on a forced 1x4 host mesh, page-exhaustion
+# backpressure included.  Self-asserting (exits nonzero on violation);
+# the CI "Serving parity + bench" step and the nightly bench job both
+# invoke exactly this target.  The committed metrics entry lives in the
+# serving_engine key of BENCH_kernels.json (via kernels_bench's
+# serving_probe --bench subprocess).
+bench-serving:
+	$(PY) benchmarks/serving_probe.py --parity
 
 # docs gate: docs/API.md names resolve against the modules; the README
 # quickstart blocks execute (scripts/check_api_docs.py, CI `docs` job)

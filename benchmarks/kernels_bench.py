@@ -372,6 +372,35 @@ def _drift_case(width: int, nq: int, epochs: int = 10) -> dict:
     return out
 
 
+def _serving_case(n_requests: int) -> dict:
+    """Serving engine end-to-end on the device index plane (DESIGN.md
+    §5.9): the offered-load sweep (``benchmarks/serving_probe.py
+    --bench``, 1x4 host mesh) — Poisson/Zipf arrivals through the
+    continuous-batching engine with the routed sharded search answering
+    session lookups and the route controller in the loop.  Prints one
+    JSON object with p50/p99 request latency (decode-step units),
+    tokens/sec, index-plane query share, steady-state spill rate, the
+    backpressure counters, and the host-vs-device bit-identity flag CI
+    gates on."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)            # probe forces its own count
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "benchmarks/serving_probe.py", "--bench",
+         "--requests", str(n_requests)],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=3600)
+    assert r.returncode == 0, f"serving probe failed:" \
+                              f"\n{r.stdout[-2000:]}\n{r.stderr[-2000:]}"
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    emit("serving_engine", out["p99_latency_steps"],
+         f"p50={out['p50_latency_steps']};"
+         f"tok_s={out['tokens_per_sec']};"
+         f"plane_share={out['index_plane_share']:.2f};"
+         f"spill={out['steady_state_spill_rate']:.4f};"
+         f"parity={out['parity_bit_identical']}")
+    return out
+
+
 def _sharded_refresh_case(width: int) -> dict:
     """Sharded-vs-replicated refresh race on a forced host mesh
     (DESIGN.md §5.4).  The mesh needs
@@ -476,6 +505,10 @@ def run(quick: bool = False) -> dict:
     # bound (<=1% spill within K epochs of every transition) is gated
     # in CI against this entry
     payload["routing_controller"] = _drift_case(4096, 8192)
+    # the serving engine end-to-end on the routed device plane
+    # (DESIGN.md §5.9): request-level latency under offered load, with
+    # the parity flag and steady-state spill gated in CI
+    payload["serving_engine"] = _serving_case(8 if quick else 16)
 
     # hot_gather: bytes-touched model (hot hits avoid HBM entirely); the
     # hot set comes from observed counts, as the splay heights do

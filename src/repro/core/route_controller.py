@@ -47,9 +47,27 @@ from repro.kernels.splay_search import DEFAULT_ROUTE_SLACK, route_capacity
 
 __all__ = [
     "ControllerConfig", "ControllerState", "default_slack_ladder",
-    "init_controller", "controller_step", "run_serving_controlled",
-    "max_share", "routing_gini",
+    "init_controller", "controller_step", "overflow_machine_step",
+    "run_serving_controlled", "max_share", "routing_gini",
 ]
+
+
+def overflow_machine_step(overflow: int, size: int, batch: int,
+                          width: int, pressed: bool
+                          ) -> Tuple[bool, bool]:
+    """One host-side step of ``run_serving``'s overflow state machine
+    (DESIGN.md §5.4): given this epoch's refresh ``overflow``, the
+    post-epoch alive ``size``, the epoch ``batch`` size, the plane
+    ``width``, and whether the near-full pressure flag was already set
+    (``pressed``), return ``(pending, pressed')`` — whether the *next*
+    epoch must take the full-rebuild branch, and the updated
+    edge-trigger latch.  Shared by every host-stepped epoch loop
+    (:func:`run_serving_controlled`, the device-indexed
+    ``serve.kv_cache.PagedKVPool``) so their rebuild scheduling is
+    bit-identical to the device-side scan in ``splaylist.run_serving``."""
+    pressure = int(size) + int(batch) > int(width)
+    pending = int(overflow) > 0 or (pressure and not pressed)
+    return pending, pressure
 
 
 # ---------------------------------------------------------------------------
@@ -305,10 +323,8 @@ def run_serving_controlled(st, plane, kinds, keys, upd_mask,
         res.append(r); plen.append(p); ovf.append(ov)
         spl.append(sp); occ.append(oc)
         # host mirror of run_serving's overflow machine (§5.4)
-        ov_i = int(ov)
-        pressure = int(st.size) + B > width
-        pending = ov_i > 0 or (pressure and not pressed)
-        pressed = pressure
+        pending, pressed = overflow_machine_step(
+            int(ov), int(st.size), B, width, pressed)
         state = controller_step(cfg, state, int(sp), np.asarray(oc), B)
         states.append(state)
     stack = lambda xs: np.stack([np.asarray(x) for x in xs])

@@ -114,6 +114,9 @@ class SplayVocabCache:
         self.steps = 0
         self.rng = np.random.default_rng(self.seed)
         self._hot_buf = None
+        self._stream_st = None      # token-keyed SplayState (observe_serving)
+        self._stream_plane = None
+        self.stream_epochs = 0
 
     # -- bookkeeping (host side, like the paper's relaxed counters) -------
 
@@ -126,6 +129,65 @@ class SplayVocabCache:
             self.counts[ids] += cnt
             self.m += int(cnt.sum())
         if self.steps % self.refresh_every == 0:
+            self.refresh()
+
+    def observe_serving(self, tokens: np.ndarray) -> None:
+        """Fold an ``[E, B]`` block of live decode-stream token ids
+        (``-1`` = dead/pad lane) through the splay-list *serving loop*
+        itself (DESIGN.md §5.9): every row is an all-``OP_INSERT`` epoch
+        of ``splaylist.run_serving`` on a token-keyed ``SplayState``
+        whose device index plane refreshes inside the same jitted scan.
+        Insert-on-first-sight counts a token unconditionally (the
+        structural insert always rebalances), re-touches count on
+        Bernoulli(``update_prob``) coins — exactly the paper's relaxed
+        counters, but maintained *by the structure the counters
+        calibrate* instead of a side numpy histogram.  Counts sync back
+        from the state's per-node ``selfhits`` (whose total is ``m`` by
+        construction) and feed the same :meth:`heights` -> hot-set
+        refresh as :meth:`observe`.
+
+        Pad lanes become ``OP_CONTAINS`` on the absent key ``-1`` with
+        ``upd=False`` — a pure read, so ragged live sets cost nothing.
+        One jit cell per distinct ``(E, B)`` shape — callers (the
+        engine's stream buffer) should flush fixed-shape blocks."""
+        from repro.core import device_index as dix
+        from repro.core import splaylist as sx
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim != 2:
+            raise ValueError(f"tokens must be [E, B], got {tokens.shape}")
+        E, B = tokens.shape
+        if E == 0:
+            return
+        if np.any(tokens >= self.vocab):
+            raise ValueError("token id out of range for vocab "
+                             f"{self.vocab}: max {tokens.max()}")
+        if self._stream_st is None:
+            self._stream_st = sx.make(self.vocab + 2)
+            self._stream_plane = dix.from_state_device(
+                self._stream_st, n_levels=self._stream_st.max_level,
+                width=self.vocab)
+        live = tokens >= 0
+        kinds = np.where(live, sx.OP_INSERT, sx.OP_CONTAINS) \
+            .astype(np.int32)
+        upd = live & (self.rng.random((E, B)) < self.update_prob)
+        st, plane, _, _, _, _, _ = sx.run_serving(
+            self._stream_st, self._stream_plane, jnp.asarray(kinds),
+            jnp.asarray(tokens), jnp.asarray(upd))
+        self._stream_st, self._stream_plane = st, plane
+        self.stream_epochs += E
+        # sync the calibrated counters out of the structure
+        s_key = np.asarray(st.key)
+        s_self = np.asarray(st.selfhits)
+        node = np.zeros(s_key.shape[0], bool)
+        node[2:int(st.n_alloc)] = True
+        node &= ~np.asarray(st.deleted) & (s_key >= 0) \
+            & (s_key < self.vocab)
+        self.counts[:] = 0
+        self.counts[s_key[node]] = s_self[node]
+        self.m = int(st.m)
+        before = self.steps
+        self.steps += E
+        if self.steps // self.refresh_every != before // self.refresh_every:
             self.refresh()
 
     def heights(self) -> np.ndarray:

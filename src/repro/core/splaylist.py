@@ -595,6 +595,45 @@ def run_ops(st: SplayState, kinds, keys, upd_mask):
     return st, res, plen
 
 
+def pad_op_batch(kinds, keys, upd_mask, batch: int):
+    """Host-side static-shape padding for epoch op buffers (the serving
+    engine's jit-stability seam, DESIGN.md §5.9): right-pad an op batch
+    of ``n <= batch`` live lanes to exactly ``batch`` lanes with
+    guaranteed no-ops — ``OP_CONTAINS`` with ``upd=False`` (a pure
+    read: no counter touch, no structural change, so the padded epoch
+    leaves the state bit-identical to the unpadded one).
+
+    Pad *keys* cycle the batch's live keys (``np.resize``) instead of a
+    sentinel: on the routed sharded search path every in-batch lane is
+    exchanged (only wrapper-added pads past ``n_live`` are excluded),
+    so a constant sentinel key would pile fake occupancy onto one shard
+    and distort the controller's balance signal — cycled real keys keep
+    the per-shard occupancy mirroring the live key distribution.  An
+    all-pad batch (``n == 0``) falls back to the max in-range key,
+    which stays harmless (reads only).
+
+    Returns ``(kinds[batch], keys[batch], upd[batch], n)`` as int32 /
+    int32 / bool numpy arrays plus the live-lane count."""
+    kinds = np.asarray(kinds, np.int32).ravel()
+    keys = np.asarray(keys, np.int32).ravel()
+    upd = np.asarray(upd_mask, bool).ravel()
+    n = kinds.shape[0]
+    if not (keys.shape[0] == n and upd.shape[0] == n):
+        raise ValueError(
+            f"ragged op batch: kinds={n}, keys={keys.shape[0]}, "
+            f"upd={upd.shape[0]}")
+    if n > batch:
+        raise ValueError(f"op batch of {n} exceeds pad target {batch}")
+    out_kinds = np.full(batch, OP_CONTAINS, np.int32)
+    out_keys = np.full(batch, POS_INF_32 - 1, np.int32)
+    out_upd = np.zeros(batch, bool)
+    out_kinds[:n] = kinds
+    out_upd[:n] = upd
+    if n:
+        out_keys[:] = np.resize(keys, batch)
+    return out_kinds, out_keys, out_upd, n
+
+
 @functools.partial(jax.jit, static_argnames=("aggregate",))
 def run_contains_batch(st: SplayState, keys, upd_mask,
                        aggregate: bool = False):

@@ -246,6 +246,130 @@ DRIFT_SCENARIOS = {
 }
 
 
+# ---------------------------------------------------------------------------
+# request-level arrival processes (DESIGN.md §5.9): what the serving
+# engine's async queue consumes — requests with arrival times, Zipf
+# prompt token streams, and per-request decode budgets
+# ---------------------------------------------------------------------------
+
+class ArrivalStream(NamedTuple):
+    """A request arrival trace for ``serve.engine.Engine``.
+
+    Declared invariants (asserted by ``tests/test_workload_arrivals``):
+      * ``arrival`` is non-decreasing with ``arrival[0] >= 0`` — epochs
+        are *decode-step* units, the engine's virtual clock;
+      * ``seq_ids`` are unique (session identity, keys of the paged-KV
+        splay index);
+      * ``prompt_lens[i] in [1, prompts.shape[1]]`` and
+        ``prompts[i, j]`` is a token id in ``[1, vocab)`` for
+        ``j < prompt_lens[i]`` and ``-1`` (pad) past it;
+      * ``max_new[i] >= 1``.
+    An empty stream (``n_requests == 0``) keeps every invariant with
+    zero-length leading axes."""
+    arrival: np.ndarray      # int32[R] non-decreasing decode-step epochs
+    seq_ids: np.ndarray      # int32[R] unique request/session ids
+    prompts: np.ndarray      # int32[R, P] token ids, -1 right-padded
+    prompt_lens: np.ndarray  # int32[R]
+    max_new: np.ndarray      # int32[R] per-request decode budget
+    name: str
+
+
+def poisson_zipf_arrivals(n_requests: int, rate: float, vocab: int,
+                          prompt_len=(2, 8), max_new=8,
+                          zipf_s: float = 1.0, seed: int = 0,
+                          name: str = "poisson_zipf") -> ArrivalStream:
+    """Poisson arrivals (``rate`` = mean requests per decode step;
+    ``rate=inf`` collapses to a single burst at epoch 0) carrying
+    Zipf(``zipf_s``) prompt token streams — token traffic and session
+    traffic are the same skew phenomenon the splay tiers exploit
+    (DESIGN.md §3/§5.9).  ``prompt_len`` and ``max_new`` may be ints or
+    inclusive ``(lo, hi)`` ranges.  Deterministic per seed."""
+    if n_requests < 0:
+        raise ValueError(f"n_requests must be >= 0, got {n_requests}")
+    if not rate > 0:
+        raise ValueError(f"rate must be > 0 (or inf), got {rate}")
+    if vocab < 2:
+        raise ValueError(f"vocab must be >= 2, got {vocab}")
+    rng = np.random.default_rng(seed)
+    lo, hi = (prompt_len, prompt_len) if np.isscalar(prompt_len) \
+        else prompt_len
+    mlo, mhi = (max_new, max_new) if np.isscalar(max_new) else max_new
+    if lo < 1 or mlo < 1:
+        raise ValueError("prompt_len and max_new must be >= 1")
+    r = n_requests
+    if np.isinf(rate):
+        arrival = np.zeros(r, np.int64)
+    else:
+        arrival = np.floor(np.cumsum(
+            rng.exponential(1.0 / rate, r))).astype(np.int64)
+    lens = rng.integers(lo, hi + 1, r).astype(np.int32)
+    p = int(hi)
+    toks = 1 + zipf_token_ids(rng, vocab - 1, (r, p), s=zipf_s) \
+        if r else np.zeros((0, p), np.int32)
+    toks = np.where(np.arange(p)[None, :] < lens[:, None], toks,
+                    -1).astype(np.int32)
+    return ArrivalStream(
+        arrival=arrival.astype(np.int32),
+        seq_ids=np.arange(r, dtype=np.int32),
+        prompts=toks, prompt_lens=lens,
+        max_new=rng.integers(mlo, mhi + 1, r).astype(np.int32),
+        name=name)
+
+
+# kv-pool request-trace op kinds (serve.kv_cache differential tests)
+KV_CREATE, KV_LOOKUP, KV_RELEASE = 0, 1, 2
+
+
+class KVTrace(NamedTuple):
+    """A recorded ``PagedKVPool`` request trace: create/lookup/release
+    interleavings over a bounded session-id space, with deliberate
+    re-used ``seq_ids`` (create after release) and misses (lookups of
+    absent sessions, double-creates, releases of absent sessions) — the
+    differential fixture for the device-indexed pool (DESIGN.md §5.9)."""
+    kinds: np.ndarray    # int32[T] in {KV_CREATE, KV_LOOKUP, KV_RELEASE}
+    seq_ids: np.ndarray  # int32[T]
+    name: str
+
+
+def kv_request_trace(n_ops: int, n_seqs: int, seed: int = 0,
+                     p_create: float = 0.3, p_release: float = 0.15,
+                     miss_frac: float = 0.15,
+                     name: str = "kv_trace") -> KVTrace:
+    """Generate a :class:`KVTrace`.  Live-set tracking makes the trace
+    meaningful: creates target absent ids (re-using released ones),
+    releases target live ids, lookups mostly hit live ids; a
+    ``miss_frac`` slice deliberately inverts that (absent lookups,
+    double-creates, absent releases).  Deterministic per seed."""
+    if n_seqs < 1:
+        raise ValueError(f"n_seqs must be >= 1, got {n_seqs}")
+    rng = np.random.default_rng(seed)
+    live: list = []
+    dead = list(range(n_seqs))
+    kinds = np.empty(n_ops, np.int32)
+    sids = np.empty(n_ops, np.int32)
+    for t in range(n_ops):
+        u = rng.random()
+        miss = rng.random() < miss_frac
+        if (u < p_create and dead) or not live:
+            if miss and live:                  # double-create (a miss)
+                kinds[t], sids[t] = KV_CREATE, rng.choice(live)
+            else:
+                sid = dead.pop(int(rng.integers(len(dead))))
+                live.append(sid)
+                kinds[t], sids[t] = KV_CREATE, sid
+        elif u < p_create + p_release and live:
+            if miss and dead:                  # absent release (a miss)
+                kinds[t], sids[t] = KV_RELEASE, rng.choice(dead)
+            else:
+                sid = live.pop(int(rng.integers(len(live))))
+                dead.append(sid)
+                kinds[t], sids[t] = KV_RELEASE, sid
+        else:
+            pool = dead if (miss and dead) else live
+            kinds[t], sids[t] = KV_LOOKUP, rng.choice(pool)
+    return KVTrace(kinds=kinds, seq_ids=sids, name=name)
+
+
 def zipf_token_ids(rng: np.random.Generator, vocab: int, shape,
                    s: float = 1.0) -> np.ndarray:
     """Zipf-distributed token ids for the LM data pipeline (shares the

@@ -23,6 +23,7 @@ import jax
 import numpy as np
 
 from repro.configs import registry
+from repro.core import workload
 from repro.models import model_zoo as zoo
 from repro.serve.engine import Engine, Request
 
@@ -208,6 +209,13 @@ def main(argv=None):
                          "instead of the LM engine")
     ap.add_argument("--epochs", type=int, default=6)
     ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--device-index", action="store_true",
+                    help="answer session lookups from the device index "
+                         "plane (run_epoch plane_search) instead of the "
+                         "host reference splay-list")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate in requests per decode "
+                         "step (0 = the legacy burst-at-zero queue)")
     args = ap.parse_args(argv)
 
     if args.splay_demo:
@@ -216,18 +224,27 @@ def main(argv=None):
     cfg = (registry.get_smoke(args.arch) if args.smoke
            else registry.get(args.arch))
     params, _ = zoo.build_params(cfg, jax.random.PRNGKey(args.seed))
-    eng = Engine(cfg, params, max_batch=args.max_batch, max_seq=128)
-    rng = np.random.default_rng(args.seed)
+    eng = Engine(cfg, params, max_batch=args.max_batch, max_seq=128,
+                 device_index=args.device_index)
+    arrivals = workload.poisson_zipf_arrivals(
+        args.requests, args.rate if args.rate > 0 else float("inf"),
+        cfg.vocab, prompt_len=(2, 7), max_new=args.max_new,
+        seed=args.seed)
     for i in range(args.requests):
+        L = int(arrivals.prompt_lens[i])
         eng.submit(Request(
-            seq_id=i, prompt=rng.integers(1, cfg.vocab,
-                                          rng.integers(2, 8)),
-            max_new=args.max_new))
+            seq_id=int(arrivals.seq_ids[i]),
+            prompt=arrivals.prompts[i, :L].copy(),
+            max_new=int(arrivals.max_new[i]),
+            arrival=int(arrivals.arrival[i])))
     results = eng.run()
     for sid in sorted(results):
         print(f"seq {sid}: {results[sid]}")
+    lat = sorted(eng.latencies.values())
+    p50 = lat[len(lat) // 2] if lat else 0
     print(f"served {len(results)} sequences; pool util "
-          f"{eng.pool.utilization:.2f}")
+          f"{eng.pool.utilization:.2f}; p50 latency {p50} steps; "
+          f"stalls {eng.stalls}; preemptions {eng.preemptions}")
     return results
 
 

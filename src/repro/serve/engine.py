@@ -1,11 +1,31 @@
 """Batched serving engine with splay-adaptive session + vocab tiers.
 
-A minimal-but-real continuous-batching loop: requests enter a queue, get
-batched up to ``max_batch``, prefill once, then decode in lockstep.  Two
-splay-list integrations (DESIGN.md §3):
-  * the session/page index is a PagedKVPool (splay-indexed);
+A minimal-but-real continuous-batching loop (DESIGN.md §5.9): requests
+arrive on a virtual clock (decode-step units), wait in an arrival
+queue, and are admitted into waves of up to ``max_batch`` — admission
+reserves their prompt pages up front and refuses (head-of-line
+backpressure) when the page pool or session index is full, so a wave
+never starts work it cannot hold.  Each wave left-pad prefills through
+the decode cell, then decodes in lockstep with per-request ``max_new``
+truncation; page reservations are re-checked every generated token and
+a reservation failure preempts the request (release + requeue) instead
+of silently generating into unreserved pages.
+
+Three splay-list integrations:
+  * the session/page index is a :class:`PagedKVPool` — with
+    ``device_index=True`` its per-step liveness lookups run on the
+    device index plane (the routed mass-split sharded search under a
+    mesh, route-controller in the loop);
   * embedding lookups during decode go through the SplayVocabCache
-    two-tier gather, fed by the observed output token stream.
+    two-tier gather;
+  * the cache's counters are fed from the live decode token stream via
+    ``SplayVocabCache.observe_serving`` — fixed-shape ``[stream_epochs,
+    max_batch]`` blocks through ``splaylist.run_serving``.
+
+Decoding is greedy throughout, so a host-indexed and a device-indexed
+engine given the same arrivals produce bit-identical outputs, admission
+decisions, and latencies — the parity contract
+``benchmarks/serving_probe.py --parity`` gates in CI.
 """
 
 from __future__ import annotations
@@ -29,27 +49,45 @@ class Request:
     seq_id: int
     prompt: np.ndarray
     max_new: int = 16
+    arrival: int = 0                 # decode-step epoch (virtual clock)
     out: Optional[List[int]] = None
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
-                 max_seq: int = 256, use_splay_tier: bool = True):
+                 max_seq: int = 256, use_splay_tier: bool = True,
+                 n_pages: int = 1024, page_size: int = 16,
+                 device_index: bool = False, index_batch: int = 32,
+                 index_width: int = None, mesh=None,
+                 stream_epochs: int = 4):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
-        self.pool = PagedKVPool(n_pages=1024, page_size=16)
+        self.pool = PagedKVPool(n_pages=n_pages, page_size=page_size,
+                                device=device_index,
+                                index_width=index_width,
+                                index_batch=index_batch, mesh=mesh)
         self.vocab_cache = (SplayVocabCache(cfg.vocab_padded,
                                             hot_size=cfg.hot_vocab)
                             if use_splay_tier else None)
         self._decode = jax.jit(ss.make_decode_step(cfg))
         self.queue: List[Request] = []
+        self.clock = 0               # virtual time, decode-step units
+        self.stream_epochs = stream_epochs
+        self._stream_buf: List[np.ndarray] = []
+        # observability (serving_probe reads these)
+        self.latencies: Dict[int, int] = {}     # seq_id -> steps in system
+        self.tokens_out = 0
+        self.stalls = 0              # admission refusals (backpressure)
+        self.preemptions = 0         # mid-decode page-exhaustion requeues
 
     def submit(self, req: Request) -> None:
+        """Enqueue a request; it is admitted (pages reserved) once the
+        clock reaches ``req.arrival`` and capacity allows."""
         req.out = []
-        self.pool.create(req.seq_id)
         self.queue.append(req)
+        self.queue.sort(key=lambda r: r.arrival)   # stable: FIFO per epoch
 
     def _pad_prompts(self, reqs) -> np.ndarray:
         L = max(len(r.prompt) for r in reqs)
@@ -58,41 +96,143 @@ class Engine:
             out[i, L - len(r.prompt):] = r.prompt    # left-pad
         return out
 
+    # -- admission --------------------------------------------------------
+
+    def _try_reserve(self, r: Request) -> bool:
+        """Create the session and reserve its prompt pages atomically:
+        a partial reservation is rolled back so a refused request leaves
+        no footprint (it retries after the next wave frees pages)."""
+        if not self.pool.create(r.seq_id):
+            return False
+        if not self.pool.append_tokens(r.seq_id, len(r.prompt)):
+            self.pool.release(r.seq_id)
+            return False
+        return True
+
+    def _admit(self) -> List[Request]:
+        """Admit arrived requests in order until the wave or the pool is
+        full.  Head-of-line: the first refusal stops admission (FIFO
+        fairness — later small requests don't starve a big head)."""
+        wave: List[Request] = []
+        while self.queue and len(wave) < self.max_batch \
+                and self.queue[0].arrival <= self.clock:
+            if not self._try_reserve(self.queue[0]):
+                self.stalls += 1
+                break
+            wave.append(self.queue.pop(0))
+        return wave
+
+    # -- the decode-stream -> vocab-cache tap -----------------------------
+
+    def _stream_observe(self, toks: np.ndarray, live: np.ndarray) -> None:
+        """Buffer one decode step's emitted tokens (dead lanes -> -1,
+        width padded to ``max_batch``) and flush fixed-shape
+        ``[stream_epochs, max_batch]`` blocks through
+        ``observe_serving`` — one jit cell for the whole run."""
+        if self.vocab_cache is None:
+            return
+        row = np.full(self.max_batch, -1, np.int32)
+        n = toks.shape[0]
+        row[:n] = np.where(live[:n], toks[:, 0], -1)
+        self._stream_buf.append(row)
+        if len(self._stream_buf) >= self.stream_epochs:
+            self.vocab_cache.observe_serving(np.stack(self._stream_buf))
+            self._stream_buf = []
+
+    # -- the serving loop -------------------------------------------------
+
     def run(self) -> Dict[int, List[int]]:
-        """Drain the queue; returns seq_id -> generated ids."""
+        """Serve the queue to completion; returns seq_id -> generated
+        ids.  Advances the virtual clock through idle gaps, admits
+        waves as requests arrive, and records per-request latency
+        (completion clock minus arrival) in ``self.latencies``."""
         results: Dict[int, List[int]] = {}
         while self.queue:
-            batch = self.queue[:self.max_batch]
-            self.queue = self.queue[self.max_batch:]
-            toks = self._pad_prompts(batch)
-            B, L = toks.shape
-            cache = zoo.init_cache(self.cfg, B, self.max_seq)
-            # prefill token-by-token through the decode path (keeps the
-            # engine cache-layout-agnostic; bulk prefill is launch-level)
-            cache_len = jnp.array(0, jnp.int32)
-            last = None
-            for t in range(L):
-                last, cache = self._decode(
-                    self.params, jnp.asarray(toks[:, t:t + 1]), cache,
-                    cache_len)
-                cache_len = cache_len + 1
-            for r in batch:
-                self.pool.append_tokens(r.seq_id, L)
-            # decode
-            max_new = max(r.max_new for r in batch)
-            cur = last
-            for t in range(max_new):
-                if self.vocab_cache is not None:
-                    self.vocab_cache.observe(np.asarray(cur))
-                cur, cache = self._decode(self.params, cur, cache,
-                                          cache_len)
-                cache_len = cache_len + 1
-                arr = np.asarray(cur)
-                for i, r in enumerate(batch):
-                    if t < r.max_new:
-                        r.out.append(int(arr[i, 0]))
-                        self.pool.append_tokens(r.seq_id, 1)
-            for r in batch:
-                results[r.seq_id] = r.out
-                self.pool.release(r.seq_id)
+            wave = self._admit()
+            if not wave:
+                nxt = self.queue[0].arrival
+                if nxt > self.clock:
+                    self.clock = nxt           # idle: jump to next arrival
+                    continue
+                raise RuntimeError(
+                    f"request seq_id={self.queue[0].seq_id} cannot be "
+                    f"admitted into an empty engine (prompt needs more "
+                    f"pages than the pool holds / index full)")
+            self._serve_wave(wave, results)
+        if self._stream_buf and self.vocab_cache is not None:
+            pad = [np.full(self.max_batch, -1, np.int32)] * \
+                (self.stream_epochs - len(self._stream_buf))
+            self.vocab_cache.observe_serving(
+                np.stack(self._stream_buf + pad))
+            self._stream_buf = []
         return results
+
+    def _serve_wave(self, wave: List[Request],
+                    results: Dict[int, List[int]]) -> None:
+        toks = self._pad_prompts(wave)
+        B, L = toks.shape
+        # left-padding consumes cache positions: top the reservation up
+        # to the padded length (same host accounting both index modes)
+        kept_idx: List[int] = []
+        for i, r in enumerate(wave):
+            pad = L - len(r.prompt)
+            if pad and not self.pool.append_tokens(r.seq_id, pad):
+                self.pool.release(r.seq_id)
+                self.preemptions += 1
+                self.submit(r)
+                continue
+            kept_idx.append(i)
+        if not kept_idx:
+            return
+        if len(kept_idx) < len(wave):
+            toks = toks[kept_idx]
+            wave = [wave[i] for i in kept_idx]
+            B = len(wave)
+        cache = zoo.init_cache(self.cfg, B, self.max_seq)
+        # prefill token-by-token through the decode path (keeps the
+        # engine cache-layout-agnostic; bulk prefill is launch-level)
+        cur, cache, cache_len = ss.prefill_loop(
+            self._decode, self.params, toks, cache)
+        self.clock += L
+        live = np.ones(B, bool)
+        max_new = max(r.max_new for r in wave)
+        for t in range(max_new):
+            self._stream_observe(np.asarray(cur), live)
+            cur, cache = self._decode(self.params, cur, cache, cache_len)
+            cache_len = cache_len + 1
+            self.clock += 1
+            arr = np.asarray(cur)
+            # splay-indexed liveness: one plane lookup per decode step
+            # over the wave's sessions (device mode: the routed sharded
+            # search answers these — the index-plane query share)
+            ids = [r.seq_id for i, r in enumerate(wave) if live[i]]
+            if ids:
+                ok = self.pool.lookup_batch(ids)
+                assert ok.all(), "live session missing from index"
+            for i, r in enumerate(wave):
+                if not live[i] or t >= r.max_new:
+                    continue
+                if not self.pool.append_tokens(r.seq_id, 1):
+                    # page exhaustion mid-decode: preempt, don't emit
+                    # into unreserved pages — release and requeue whole
+                    # (original arrival kept: latency spans the retry)
+                    self.pool.release(r.seq_id)
+                    if self.pool.utilization == 0.0:
+                        raise RuntimeError(
+                            f"seq_id={r.seq_id} exhausted the page pool "
+                            f"alone: prompt+max_new needs more than "
+                            f"{self.pool.n_pages} pages")
+                    self.preemptions += 1
+                    r.out = []
+                    self.submit(r)
+                    live[i] = False
+                    continue
+                r.out.append(int(arr[i, 0]))
+                self.tokens_out += 1
+                if len(r.out) >= r.max_new:
+                    self.latencies[r.seq_id] = self.clock - r.arrival
+                    results[r.seq_id] = r.out
+                    self.pool.release(r.seq_id)
+                    live[i] = False
+            if not live.any():
+                break

@@ -1,10 +1,35 @@
 """Paged KV-cache pool with a splay-list page index.
 
-Pages of ``page_size`` positions are pooled; each sequence owns a chain of
-pages.  The *index* mapping (seq_id -> slot) is a splay-list, so lookups
-for hot sessions are O(log(m/f)) — the paper's structure doing real work
-in the serving path.  (The dense cache used by decode cells lives in
-model_zoo.init_cache; this pool backs the engine's session management.)
+Pages of ``page_size`` positions are pooled; each sequence owns a chain
+of pages.  The *index* mapping (seq_id -> present) is a splay-list, so
+lookups for hot sessions are O(log(m/f)) — the paper's structure doing
+real work in the serving path.  (The dense cache used by decode cells
+lives in model_zoo.init_cache; this pool backs the engine's session
+management.)
+
+Two index backends (DESIGN.md §5.9):
+
+  * **host** (default): the pure-python ``core.ref_py.SplayList`` — the
+    seed's reference index, one ``contains``/``insert``/``delete`` walk
+    per call.
+  * **device** (``device=True``): the jitted ``core.splaylist``
+    ``SplayState`` plus its device index plane.  Mutations (create ->
+    ``OP_INSERT``, release -> ``OP_DELETE``) buffer host-side and flush
+    through one ``run_epoch`` (mixed-op scan + plane refresh) before
+    any lookup, so the plane entering a lookup epoch is an exact
+    membership snapshot of the live session set; lookups then batch
+    through ``run_epoch(aggregate=True, plane_search=True)`` — on a
+    mesh, the *routed* mass-split sharded search (PR 5), with the PR 6
+    ``route_controller`` closing the loop on each epoch's
+    ``RouteStats`` (slack ladder, lanes->mass escalation, one-shot
+    rebuild).  Membership is structural (coin-independent), so the two
+    backends return bit-identical verdicts on any request trace — the
+    differential contract ``tests/test_kv_cache.py`` and
+    ``benchmarks/serving_probe.py --parity`` assert.
+
+Page bookkeeping (free list, chains, lengths) stays host-side in both
+modes: it is O(1) dict/list metadata per request, not index search
+work — the host/device cut puts only the searched structure on device.
 """
 
 from __future__ import annotations
@@ -17,31 +42,178 @@ from repro.core.ref_py import SplayList
 
 
 class PagedKVPool:
+    """``device=False`` keeps the seed's host behaviour exactly.
+
+    ``device=True`` activates the device index: ``index_width`` bounds
+    the live-session count the plane can represent (``create`` returns
+    ``False`` — admission backpressure — at the bound; default rounds
+    ``max(n_pages, 64)`` up to a multiple of 8 so any 1/2/4/8-way mesh
+    divides it, and since a prefilled session holds at least one page,
+    page exhaustion always binds first at the default).  ``index_batch``
+    is the static op/lookup epoch width (jit-cache stability:
+    ``pad_op_batch`` pads every chunk to it).  ``mesh``/``axis`` lay the
+    plane out width-sharded (``sharding.shard_index_plane``) and route
+    lookups through the all_to_all exchange; meshless, the same epochs
+    run replicated on one device."""
+
     def __init__(self, n_pages: int, page_size: int, max_level: int = 24,
-                 p: float = 0.1):
+                 p: float = 0.1, device: bool = False,
+                 index_width: int = None, index_batch: int = 32,
+                 mesh=None, axis: str = "model"):
         self.n_pages = n_pages
         self.page_size = page_size
         self.free: List[int] = list(range(n_pages))
         self.chains: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}
-        self.index = SplayList(max_level=max_level, p=p)
+        self.device = bool(device)
+        self.stats = {"lookups": 0, "plane_queries": 0, "plane_epochs": 0,
+                      "flush_epochs": 0, "spill": 0, "rebuilds": 0,
+                      "create_rejects": 0}
+        if not self.device:
+            self.index = SplayList(max_level=max_level, p=p)
+            return
+        from repro.core import device_index as dix
+        from repro.core import route_controller as rc
+        from repro.core import splaylist as sx
+        self._sx, self._dix, self._rc = sx, dix, rc
+        self.axis = axis
+        self.mesh = mesh
+        n_shards = (int(mesh.shape[axis])
+                    if mesh is not None and axis in mesh.shape else 1)
+        if index_width is None:
+            index_width = -(-max(n_pages, 64) // 8) * 8
+        if mesh is not None and index_width % n_shards:
+            raise ValueError(
+                f"index_width={index_width} not divisible by the "
+                f"{n_shards}-shard mesh axis {axis!r}")
+        self.index_width = int(index_width)
+        self.index_batch = int(index_batch)
+        self._sharded = mesh is not None and n_shards > 1
+        self._st = sx.make(self.index_width + 2, max_level=max_level)
+        self._plane = dix.from_state_device(
+            self._st, n_levels=max_level, width=self.index_width)
+        if self._sharded:
+            from repro.parallel import sharding as shd
+            self._plane = shd.shard_index_plane(self._plane, mesh)
+        self.ctrl_cfg, self.ctrl = rc.init_controller(n_shards)
+        self._pending: List[tuple] = []   # (OP_INSERT|OP_DELETE, seq_id)
+        self._rebuild_pending = False
+        self._pressed = False
+        self.last_occupancy = np.zeros(max(n_shards, 1), np.int64)
+        self.spill_traj: List[int] = []   # per plane-epoch spill counts
+        self.share_traj: List[float] = []  # per plane-epoch max-share
+
+    # -- device epochs ----------------------------------------------------
+
+    def _epoch(self, kinds, keys, upd, aggregate, plane_search):
+        """One padded op/lookup epoch through ``run_epoch``, stepping
+        the overflow machine and (on lookup epochs) the controller."""
+        sx, rc = self._sx, self._rc
+        B = kinds.shape[0]
+        rebuild = self._rebuild_pending or self.ctrl.force_rebuild
+        if rebuild:
+            self.stats["rebuilds"] += 1
+        sharded = self._sharded
+        st, plane, res, plen, ovf, spl, occ = sx.run_epoch(
+            self._st, self._plane, kinds, keys, upd,
+            aggregate=aggregate, rebuild=rebuild,
+            mesh=self.mesh if sharded else None, axis=self.axis,
+            plane_search=plane_search,
+            split=self.ctrl.split if sharded else "lanes",
+            route_slack=(self.ctrl.slack_of(self.ctrl_cfg)
+                         if sharded else None))
+        self._st, self._plane = st, plane
+        self._rebuild_pending, self._pressed = rc.overflow_machine_step(
+            int(ovf), int(st.size), B, self.index_width, self._pressed)
+        if plane_search:
+            self.stats["plane_epochs"] += 1
+            self.stats["spill"] += int(spl)
+            self.last_occupancy = np.asarray(occ, np.int64)
+            self.spill_traj.append(int(spl))
+            self.share_traj.append(rc.max_share(self.last_occupancy))
+            self.ctrl = rc.controller_step(
+                self.ctrl_cfg, self.ctrl, int(spl), np.asarray(occ), B)
+        else:
+            self.stats["flush_epochs"] += 1
+            # flush epochs route nothing; still clear a one-shot rebuild
+            self.ctrl = self.ctrl._replace(force_rebuild=False)
+        return np.asarray(res)
+
+    def _flush(self) -> None:
+        """Apply buffered membership mutations (insert/delete epochs with
+        plane refresh) so the plane is an exact live-set snapshot before
+        the next lookup epoch answers from it."""
+        if not self.device or not self._pending:
+            return
+        sx = self._sx
+        ops, self._pending = self._pending, []
+        B = self.index_batch
+        for i in range(0, len(ops), B):
+            chunk = ops[i:i + B]
+            kinds = np.fromiter((k for k, _ in chunk), np.int32,
+                                len(chunk))
+            keys = np.fromiter((s for _, s in chunk), np.int32,
+                               len(chunk))
+            kd, ks, up, _ = sx.pad_op_batch(
+                kinds, keys, np.ones(len(chunk), bool), B)
+            self._epoch(kd, ks, up, aggregate=False, plane_search=False)
+
+    def lookup_batch(self, seq_ids) -> np.ndarray:
+        """Vector membership: ``out[i]`` iff ``seq_ids[i]`` is a live
+        session.  Device mode answers every lane from the index plane
+        (routed sharded search under a mesh) in ``index_batch``-padded
+        epochs; host mode walks the reference list per id.  Verdicts
+        are bit-identical across backends."""
+        seq_ids = np.asarray(seq_ids, np.int64).ravel()
+        self.stats["lookups"] += seq_ids.size
+        if not self.device:
+            return np.array([self.index.contains(int(s))
+                             for s in seq_ids], bool)
+        self._flush()
+        sx = self._sx
+        out = np.zeros(seq_ids.size, bool)
+        B = self.index_batch
+        for i in range(0, seq_ids.size, B):
+            chunk = seq_ids[i:i + B].astype(np.int32)
+            kd, ks, up, n = sx.pad_op_batch(
+                np.full(chunk.size, sx.OP_CONTAINS, np.int32), chunk,
+                np.ones(chunk.size, bool), B)
+            res = self._epoch(kd, ks, up, aggregate=True,
+                              plane_search=True)
+            out[i:i + n] = res[:n]
+            self.stats["plane_queries"] += n
+        return out
+
+    # -- pool API ---------------------------------------------------------
 
     def create(self, seq_id: int) -> bool:
         if seq_id in self.chains:
             return False
+        if self.device and len(self.chains) >= self.index_width:
+            # the plane cannot represent another live session: refuse
+            # admission rather than let the index go permanently stale
+            # (size > width overflow is unrecoverable at this shape)
+            self.stats["create_rejects"] += 1
+            return False
         self.chains[seq_id] = []
         self.lengths[seq_id] = 0
-        self.index.insert(seq_id)
+        if self.device:
+            self._pending.append((self._sx.OP_INSERT, int(seq_id)))
+        else:
+            self.index.insert(seq_id)
         return True
 
     def lookup(self, seq_id: int) -> Optional[List[int]]:
         """Splay-indexed hot-session lookup."""
-        if not self.index.contains(seq_id):
+        if not self.lookup_batch([seq_id])[0]:
             return None
         return self.chains.get(seq_id)
 
     def append_tokens(self, seq_id: int, n: int) -> bool:
-        """Reserve page space for n more positions."""
+        """Reserve page space for n more positions.  ``False`` means the
+        free list ran dry mid-reservation — pages already chained stay
+        reserved (the caller releases or retries; ``Engine`` surfaces
+        this as preemption/backpressure, DESIGN.md §5.9)."""
         assert seq_id in self.chains
         need = (self.lengths[seq_id] + n + self.page_size - 1) \
             // self.page_size
@@ -56,7 +228,10 @@ class PagedKVPool:
         if seq_id in self.chains:
             self.free.extend(self.chains.pop(seq_id))
             self.lengths.pop(seq_id, None)
-            self.index.delete(seq_id)
+            if self.device:
+                self._pending.append((self._sx.OP_DELETE, int(seq_id)))
+            else:
+                self.index.delete(seq_id)
 
     def page_table(self, seq_id: int, max_pages: int) -> np.ndarray:
         chain = self.chains.get(seq_id, [])

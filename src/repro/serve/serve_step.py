@@ -33,6 +33,24 @@ def make_decode_step(cfg: ModelConfig):
     return decode_step
 
 
+def prefill_loop(decode_fn, params, tokens, cache, cache_len0: int = 0):
+    """Token-by-token prefill through the decode cell: feed ``tokens``
+    (``[B, L]``, already left-padded) one position at a time, returning
+    ``(last, cache, cache_len)`` where ``last`` is the ``[B, 1]`` greedy
+    continuation after the final prompt position.  Keeps the engine
+    cache-layout-agnostic (bulk prefill is launch-level); shared by
+    ``serve.engine.Engine`` and the left-pad parity tests so both walk
+    the exact same cell sequence."""
+    B, L = tokens.shape
+    cache_len = jnp.asarray(cache_len0, jnp.int32)
+    last = None
+    for t in range(L):
+        last, cache = decode_fn(params, jnp.asarray(tokens[:, t:t + 1]),
+                                cache, cache_len)
+        cache_len = cache_len + 1
+    return last, cache, cache_len
+
+
 def decode_input_specs(cfg: ModelConfig, seq_len: int, global_batch: int):
     """Avals for one decode step with a seq_len KV/SSM cache."""
     tokens = jax.ShapeDtypeStruct((global_batch, 1), jnp.int32)

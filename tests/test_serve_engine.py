@@ -1,0 +1,158 @@
+"""The serving engine's queue/batch/decode loop (DESIGN.md §5.9):
+arrival-order admission, left-pad prefill parity against the training
+forward pass, per-request ``max_new`` truncation, the page-exhaustion
+backpressure path (the PR 8 regression: ``append_tokens`` returning
+``False`` must preempt, never silently generate into unreserved
+pages), and the decode-stream tap into the vocab cache.  Host index
+mode throughout — the device-index bit-identity battery runs in the
+``serving_probe`` subprocess."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import workload as wl
+from repro.models import model_zoo as zoo
+from repro.serve import serve_step as ss
+from repro.serve.engine import Engine, Request
+
+
+@pytest.fixture(scope="module")
+def smoke():
+    cfg = registry.get_smoke("qwen2-0.5b")
+    params, _ = zoo.build_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(smoke, **kw):
+    cfg, params = smoke
+    args = dict(max_batch=2, max_seq=48, n_pages=64, page_size=4,
+                use_splay_tier=True, stream_epochs=2)
+    args.update(kw)
+    return Engine(cfg, params, **args)
+
+
+def _submit_stream(eng, arr):
+    for i in range(len(arr.seq_ids)):
+        L = int(arr.prompt_lens[i])
+        eng.submit(Request(seq_id=int(arr.seq_ids[i]),
+                           prompt=arr.prompts[i, :L].copy(),
+                           max_new=int(arr.max_new[i]),
+                           arrival=int(arr.arrival[i])))
+
+
+def test_queue_drains_in_arrival_order(smoke):
+    eng = _engine(smoke, max_batch=1)
+    rng = np.random.default_rng(0)
+    # submitted shuffled; arrival epochs define the service order
+    order = [(30, 2), (0, 0), (10, 1)]
+    for arrival, sid in order:
+        eng.submit(Request(seq_id=sid,
+                           prompt=rng.integers(1, 64, 3),
+                           max_new=2, arrival=arrival))
+    res = eng.run()
+    # results dict preserves completion order -> must follow arrivals
+    assert list(res) == [0, 1, 2]
+    # non-overlapping waves: every request is served the moment it
+    # arrives, so latency is pure service time (prefill 3 + decode 2)
+    assert all(v == 5 for v in eng.latencies.values()), eng.latencies
+    assert eng.queue == [] and eng.clock >= 35
+
+
+def test_left_pad_prefill_matches_forward(smoke):
+    """The engine's token-by-token left-padded prefill must agree with
+    one dense ``zoo.forward`` pass over the same padded tokens."""
+    cfg, params = smoke
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab, n) for n in (3, 5, 2)]
+    eng = _engine(smoke)
+    toks = eng._pad_prompts(
+        [Request(seq_id=i, prompt=p) for i, p in enumerate(prompts)])
+    B, L = toks.shape
+    assert L == 5 and (toks[0, :2] == 0).all(), "left-pad expected"
+
+    dec = jax.jit(ss.make_decode_step(cfg))
+    cache = zoo.init_cache(cfg, B, 16)
+    last, _, clen = ss.prefill_loop(dec, params, toks, cache)
+    assert int(clen) == L
+
+    logits = zoo.forward(params, cfg, toks)
+    want = np.asarray(jax.numpy.argmax(logits[:, -1], axis=-1))
+    np.testing.assert_array_equal(np.asarray(last)[:, 0], want)
+
+
+def test_per_request_max_new_truncation(smoke):
+    eng = _engine(smoke)
+    rng = np.random.default_rng(2)
+    eng.submit(Request(seq_id=0, prompt=rng.integers(1, 64, 3),
+                       max_new=2))
+    eng.submit(Request(seq_id=1, prompt=rng.integers(1, 64, 3),
+                       max_new=6))
+    res = eng.run()
+    assert len(res[0]) == 2 and len(res[1]) == 6
+    assert eng.latencies[0] < eng.latencies[1]
+    assert eng.pool.utilization == 0.0, "done sequences must release"
+
+
+def test_page_exhaustion_preempts_and_requeues(smoke):
+    """The regression the PR fixes: a dry free list mid-decode must
+    preempt (release + requeue + eventually complete), not generate
+    tokens with no pages reserved."""
+    arr = wl.poisson_zipf_arrivals(6, float("inf"), 64,
+                                   prompt_len=(3, 6), max_new=6, seed=4)
+    eng = _engine(smoke, n_pages=7, max_batch=3)
+    _submit_stream(eng, arr)
+    res = eng.run()
+    assert set(res) == set(range(6)), "preempted requests must finish"
+    assert all(len(v) == 6 for v in res.values())
+    assert eng.stalls + eng.preemptions > 0, \
+        "tight pool exercised no backpressure"
+    assert eng.pool.utilization == 0.0
+    # page accounting never went negative / leaked under the churn
+    assert sorted(eng.pool.free) == list(range(7))
+
+
+def test_admission_never_overcommits_pool(smoke):
+    """Admission reserves the whole prompt up front and refuses past
+    capacity — lengths never exceed what pages were reserved for."""
+    eng = _engine(smoke, n_pages=2, max_batch=4, page_size=4)
+    rng = np.random.default_rng(5)
+    for i in range(3):
+        eng.submit(Request(seq_id=i, prompt=rng.integers(1, 64, 4),
+                           max_new=2))
+    res = eng.run()
+    assert set(res) == {0, 1, 2}
+    assert eng.stalls > 0, "pool of 2 pages must stall a 3-wave"
+
+
+def test_single_request_exceeding_pool_raises(smoke):
+    eng = _engine(smoke, n_pages=1, page_size=2)
+    eng.submit(Request(seq_id=0, prompt=np.array([1, 2, 3]), max_new=2))
+    with pytest.raises(RuntimeError, match="cannot be admitted"):
+        eng.run()
+
+
+def test_decode_stream_feeds_vocab_cache(smoke):
+    eng = _engine(smoke, stream_epochs=2)
+    rng = np.random.default_rng(6)
+    for i in range(2):
+        eng.submit(Request(seq_id=i, prompt=rng.integers(1, 64, 3),
+                           max_new=5))
+    eng.run()
+    vc = eng.vocab_cache
+    assert vc.stream_epochs > 0, "decode stream never reached the cache"
+    assert vc.m == vc.counts.sum() > 0
+    assert vc.m <= eng.tokens_out + len(eng.latencies), \
+        "cache counted more than the emitted stream"
+    assert eng._stream_buf == [], "stream buffer must flush at drain"
+
+
+def test_idle_clock_jumps_to_next_arrival(smoke):
+    eng = _engine(smoke)
+    eng.submit(Request(seq_id=0, prompt=np.array([1, 2]), max_new=2,
+                       arrival=100))
+    res = eng.run()
+    assert set(res) == {0}
+    assert eng.latencies[0] < 100, "latency must not include idle time"
+    assert eng.clock >= 100

@@ -1,0 +1,23 @@
+"""Device-indexed serving bit-identity (DESIGN.md §5.9): the pool trace
+differential on a forced 1x4 host mesh and the end-to-end engine parity
+(host index vs device plane, meshless and sharded, backpressure
+included) run in the ``benchmarks/serving_probe.py --parity``
+subprocess — the forced device count must precede jax initialization,
+exactly like the sharded-search battery.  CI runs this same probe in
+its "Serving parity + bench" step; locally it rides ``make test``."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_serving_parity_on_host_mesh():
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)            # probe sets its own
+    r = subprocess.run(
+        [sys.executable, "benchmarks/serving_probe.py", "--parity"],
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=1800)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "SERVING PARITY OK" in r.stdout

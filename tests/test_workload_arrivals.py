@@ -1,0 +1,128 @@
+"""The request-level arrival generators (DESIGN.md §5.9) — the latency
+harness's input processes, tested in the ``DriftStream`` style: declared
+invariants, deterministic seeding, and the degenerate shapes
+(empty stream, burst-at-zero) the engine must survive."""
+
+import numpy as np
+import pytest
+
+from repro.core import workload as wl
+
+VOCAB = 512
+
+
+def _stream(**kw):
+    args = dict(n_requests=32, rate=0.5, vocab=VOCAB, seed=3)
+    args.update(kw)
+    return wl.poisson_zipf_arrivals(**args)
+
+
+# ---------------------------------------------------------------------------
+# poisson_zipf_arrivals
+# ---------------------------------------------------------------------------
+
+def test_arrival_invariants():
+    s = _stream()
+    r, p = s.prompts.shape
+    assert r == 32
+    assert (np.diff(s.arrival) >= 0).all(), "arrivals must be sorted"
+    assert s.arrival[0] >= 0
+    assert len(np.unique(s.seq_ids)) == r, "seq_ids must be unique"
+    assert ((s.prompt_lens >= 1) & (s.prompt_lens <= p)).all()
+    assert (s.max_new >= 1).all()
+    live = np.arange(p)[None, :] < s.prompt_lens[:, None]
+    assert ((s.prompts >= 1) & (s.prompts < VOCAB))[live].all(), \
+        "live prompt tokens must be in [1, vocab)"
+    assert (s.prompts[~live] == -1).all(), "pad must be -1"
+
+
+def test_deterministic_per_seed():
+    a, b = _stream(seed=11), _stream(seed=11)
+    for fa, fb in zip(a[:-1], b[:-1]):
+        np.testing.assert_array_equal(fa, fb)
+    c = _stream(seed=12)
+    assert not np.array_equal(a.prompts, c.prompts)
+
+
+def test_rate_scales_horizon():
+    slow = _stream(rate=0.1, n_requests=64)
+    fast = _stream(rate=10.0, n_requests=64)
+    assert slow.arrival[-1] > fast.arrival[-1], \
+        "lower offered load must spread arrivals further"
+
+
+def test_burst_rate_inf_lands_at_zero():
+    s = _stream(rate=float("inf"), n_requests=8)
+    assert (s.arrival == 0).all()
+
+
+def test_empty_stream_keeps_invariants():
+    s = _stream(n_requests=0)
+    assert s.arrival.shape == (0,) and s.seq_ids.shape == (0,)
+    assert s.prompts.shape[0] == 0 and s.max_new.shape == (0,)
+
+
+def test_scalar_and_range_lengths():
+    s = _stream(prompt_len=4, max_new=(2, 5))
+    assert (s.prompt_lens == 4).all()
+    assert s.prompts.shape[1] == 4
+    assert ((s.max_new >= 2) & (s.max_new <= 5)).all()
+
+
+def test_zipf_skew_concentrates_tokens():
+    flat = _stream(zipf_s=0.0, n_requests=256, prompt_len=8)
+    skew = _stream(zipf_s=2.0, n_requests=256, prompt_len=8)
+
+    def top_share(s):
+        toks = s.prompts[s.prompts >= 0]
+        _, cnt = np.unique(toks, return_counts=True)
+        return np.sort(cnt)[::-1][:8].sum() / cnt.sum()
+
+    assert top_share(skew) > top_share(flat)
+
+
+@pytest.mark.parametrize("bad", [dict(rate=0.0), dict(rate=-1.0),
+                                 dict(n_requests=-1), dict(vocab=1),
+                                 dict(prompt_len=(0, 4)),
+                                 dict(max_new=0)])
+def test_rejects_nonsense(bad):
+    with pytest.raises(ValueError):
+        _stream(**bad)
+
+
+# ---------------------------------------------------------------------------
+# kv_request_trace
+# ---------------------------------------------------------------------------
+
+def test_kv_trace_well_formed_and_deterministic():
+    a = wl.kv_request_trace(300, 16, seed=5)
+    b = wl.kv_request_trace(300, 16, seed=5)
+    np.testing.assert_array_equal(a.kinds, b.kinds)
+    np.testing.assert_array_equal(a.seq_ids, b.seq_ids)
+    assert set(np.unique(a.kinds)) <= {wl.KV_CREATE, wl.KV_LOOKUP,
+                                       wl.KV_RELEASE}
+    assert ((a.seq_ids >= 0) & (a.seq_ids < 16)).all()
+
+
+def test_kv_trace_reuses_ids_and_includes_misses():
+    t = wl.kv_request_trace(400, 8, seed=2)
+    live = set()
+    created, miss = {}, 0
+    for k, s in zip(t.kinds.tolist(), t.seq_ids.tolist()):
+        if k == wl.KV_CREATE:
+            if s in live:
+                miss += 1                 # double-create
+            created[s] = created.get(s, 0) + 1
+            live.add(s)
+        elif k == wl.KV_LOOKUP:
+            miss += s not in live
+        else:
+            miss += s not in live
+            live.discard(s)
+    assert max(created.values()) > 1, "no seq_id was ever re-created"
+    assert miss > 0, "trace contains no deliberate misses"
+
+
+def test_kv_trace_rejects_nonsense():
+    with pytest.raises(ValueError):
+        wl.kv_request_trace(10, 0)
