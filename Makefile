@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src:.
 
 .PHONY: test bench-smoke bench bench-sharded-search bench-drift \
-	bench-serving check-docs
+	bench-serving bench-ordered check-docs
 
 # tier-1: the full pytest suite (ROADMAP "Tier-1 verify")
 test:
@@ -51,6 +51,20 @@ bench-drift:
 # serving_probe --bench subprocess).
 bench-serving:
 	$(PY) benchmarks/serving_probe.py --parity
+
+# ordered-operation parity battery (DESIGN.md §5.10): predecessor/
+# successor, rank/select, range_count/range_scan, top_k bit-identical
+# across the host oracle, the replicated plane, and the routed sharded
+# plane (equal-lane + mass splits) on a forced 1x4 host mesh —
+# boundary-exact and boundary-straddling ranges, int32-extreme
+# endpoints, and the counted-truncation contract included.
+# Self-asserting (exits nonzero on violation); the CI "Ordered-op
+# parity" step and the nightly bench job both invoke exactly this
+# target.  The committed metrics entry lives in the search_ordered key
+# of BENCH_kernels.json (via kernels_bench's ordered_search_probe
+# --bench subprocess).
+bench-ordered:
+	$(PY) benchmarks/ordered_search_probe.py --parity
 
 # docs gate: docs/API.md names resolve against the modules; the README
 # quickstart blocks execute (scripts/check_api_docs.py, CI `docs` job)

@@ -53,6 +53,7 @@ from repro.core import device_index as dix             # noqa: E402
 from repro.core import route_controller as rc          # noqa: E402
 from repro.core import splaylist as sx                 # noqa: E402
 from repro.core import workload as wl                  # noqa: E402
+from repro.kernels import ops as kops                  # noqa: E402
 from repro.kernels import splay_search as ssk          # noqa: E402
 from repro.parallel import sharding as shd             # noqa: E402
 
@@ -145,7 +146,7 @@ def run_parity(width=1024, batch=512, epochs=12, seed=7):
     mesh = jax.make_mesh((1, N_DEV), ("data", "model"))
     k_bound = len(rc.default_slack_ladder(N_DEV))
     print(f"drift parity: w={width} B={batch} E={epochs} shards={N_DEV} "
-          f"recovery bound K={k_bound}")
+          f"recovery bound K={k_bound} mode={kops.exec_mode()}")
 
     for drift in _scenarios(n, epochs, batch, seed):
         st = _seed(drift.populate, cap, L)
@@ -221,7 +222,8 @@ def run_bench(width=4096, nq=8192, epochs=10, seed=7):
     k_bound = len(rc.default_slack_ladder(N_DEV))
     out = {"width": width, "batch": nq, "epochs": epochs,
            "shards": N_DEV, "recovery_bound_epochs": k_bound,
-           "spill_ok": SPILL_OK, "scenarios": {}}
+           "spill_ok": SPILL_OK, "exec_mode": kops.exec_mode(),
+           "scenarios": {}}
     for drift in _scenarios(n, epochs, nq, seed):
         st = _seed(drift.populate, cap, L)
         plane_r = dix.from_state_device(st, n_levels=L, width=width)

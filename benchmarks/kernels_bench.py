@@ -290,6 +290,31 @@ def _sharded_search_case(width: int, nq: int) -> dict:
     return out
 
 
+def _ordered_case(width: int, nq: int) -> dict:
+    """Ordered-operation race (DESIGN.md §5.10): ``range_scan`` on the
+    replicated vs the routed mass-split sharded plane, and its
+    bytes-touched model (rank-pair descent + ``max_range`` gathered
+    lanes) against the naive full-gather baseline (ship the whole [W]
+    bottom row per query).  Same subprocess pattern as the other mesh
+    probes (``benchmarks/ordered_search_probe.py --bench`` asserts
+    replicated/sharded bit-identity and prints one JSON object)."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)            # probe forces its own count
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "benchmarks/ordered_search_probe.py",
+         "--bench", "--width", str(width), "--nq", str(nq)],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=1200)
+    assert r.returncode == 0, f"probe failed:\n{r.stdout}\n{r.stderr}"
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    emit(f"search_ordered_w{width}", out["us_per_scan_sharded"],
+         f"replicated_us={out['us_per_scan_replicated']:.3f};"
+         f"bytes_ratio={out['bytes_ratio_ours_over_naive']:.3f};"
+         f"truncated={out['scans_truncated']};"
+         f"bit_identical={out['bit_identical']}")
+    return out
+
+
 def _pipelined_case(width: int, nq: int, qb: int, reps: int) -> dict:
     """§5.8 windowed-DMA descent vs the tiered row-streaming kernel on
     the hot-Zipf batch (alpha=1.4): bit-identity on every output triple,
@@ -432,9 +457,9 @@ def run(quick: bool = False) -> dict:
     reps = 3 if quick else 5
 
     # the execution-mode label follows the actual backend (the kernels
-    # run compiled on TPU, interpret elsewhere — see kernels/ops.on_tpu)
-    mode = ("compiled-" if ops.on_tpu() else "interpret-") \
-        + jax.default_backend()
+    # run compiled on TPU, interpret elsewhere) — shared helper so every
+    # probe derives it the same way
+    mode = ops.exec_mode()
     payload = {
         "bench": "kernels",
         "config": {"width": width, "nq": nq, "query_block": qb,
@@ -497,6 +522,11 @@ def run(quick: bool = False) -> dict:
     # mesh's fixed per-collective overhead, or the ratio gate in CI
     # measures dispatch noise instead of the exchange)
     payload["search_sharded"] = _sharded_search_case(4096, 8192)
+    # ordered-op suite (DESIGN.md §5.10): range_scan replicated vs
+    # routed mass-split sharded + the bytes race against the naive
+    # full-gather model — gated in CI from this entry
+    payload["search_ordered"] = _ordered_case(
+        1024 if quick else 2048, 1024 if quick else 2048)
     # §5.8 foresight-pipelined descent vs the tiered kernel, hot-Zipf
     # acceptance point (the streamed-bytes reduction is gated in CI)
     payload["search_pipelined"] = _pipelined_case(width, nq, qb, reps)

@@ -57,6 +57,7 @@ import numpy as np                                     # noqa: E402
 
 from repro.configs import registry                     # noqa: E402
 from repro.core import workload as wl                  # noqa: E402
+from repro.kernels import ops as kops                  # noqa: E402
 from repro.models import model_zoo as zoo              # noqa: E402
 from repro.serve.engine import Engine, Request         # noqa: E402
 from repro.serve.kv_cache import PagedKVPool           # noqa: E402
@@ -71,12 +72,18 @@ def _mesh():
     return jax.make_mesh((1, N_DEV), ("data", "model"))
 
 
-def _replay_trace(pool: PagedKVPool, trace: wl.KVTrace):
+def _replay_trace(pool: PagedKVPool, trace: wl.KVTrace,
+                  max_range: int = 6):
     """Replay a recorded request trace; returns the full observable
     record (per-op verdicts + pool accounting) for differential
-    comparison."""
+    comparison.  Scan-flavored traces (``core.workload.kv_scan_trace``)
+    add ordered queries: ``KV_SCAN`` session-range lookups
+    (``pool.lookup_range`` — ids, full count, counted truncation) and
+    ``KV_PRED`` predecessor queries, exercising the pool as an ordered
+    index (DESIGN.md §5.10)."""
     log = []
-    for k, s in zip(trace.kinds.tolist(), trace.seq_ids.tolist()):
+    for t in range(len(trace.kinds)):
+        k, s = int(trace.kinds[t]), int(trace.seq_ids[t])
         if k == wl.KV_CREATE:
             ok = pool.create(s)
             if ok:
@@ -85,6 +92,12 @@ def _replay_trace(pool: PagedKVPool, trace: wl.KVTrace):
         elif k == wl.KV_LOOKUP:
             chain = pool.lookup(s)
             log.append(("l", s, None if chain is None else tuple(chain)))
+        elif k == wl.KV_SCAN:
+            hi = int(trace.hi_ids[t])
+            ids, cnt, tr = pool.lookup_range(s, hi, max_range=max_range)
+            log.append(("s", s, hi, tuple(ids.tolist()), cnt, tr))
+        elif k == wl.KV_PRED:
+            log.append(("p", s, pool.predecessor(s)))
         else:
             pool.release(s)
             log.append(("r", s, pool.utilization))
@@ -128,23 +141,40 @@ def _engine_record(engine: Engine):
 
 def run_parity(seed=7):
     mesh = _mesh()
+    print(f"  mode={kops.exec_mode()}")
 
-    # (1) pool trace differential: host vs device, meshless + 1x4 mesh
-    for n_ops, n_seqs, tseed in ((200, 24, seed), (120, 6, seed + 1)):
-        trace = wl.kv_request_trace(n_ops, n_seqs, seed=tseed)
+    # (1) pool trace differential: host vs device, meshless + 1x4 mesh.
+    # The scan-flavored traces interleave KV_SCAN/KV_PRED ordered
+    # queries with the create/lookup/release churn, so the ordered-op
+    # plane paths (OP_PRED epochs, range_scan gathers) replay against
+    # the host oracle on the same mutating stream.
+    traces = [wl.kv_request_trace(200, 24, seed=seed),
+              wl.kv_request_trace(120, 6, seed=seed + 1),
+              wl.kv_scan_trace(200, 24, seed=seed + 2),
+              wl.kv_scan_trace(140, 8, seed=seed + 3, p_scan=0.4,
+                               span=16)]
+    for trace in traces:
         ref = _replay_trace(PagedKVPool(32, 4), trace)
+        truncs = 0
         for tag, kw in (("meshless", {}), ("1x4-mesh", {"mesh": mesh})):
-            got = _replay_trace(
-                PagedKVPool(32, 4, device=True, index_width=64,
-                            index_batch=8, **kw), trace)
+            pool = PagedKVPool(32, 4, device=True, index_width=64,
+                               index_batch=8, **kw)
+            got = _replay_trace(pool, trace)
+            truncs = pool.stats["range_truncated"]
             if got != ref:
                 diff = next(((a, b) for a, b in zip(ref[0], got[0])
                              if a != b), (ref[1:], got[1:]))
                 raise AssertionError(
-                    f"pool trace diverged ({trace.name} seed={tseed} "
-                    f"{tag}): first diff {diff}")
-        print(f"  pool trace {n_ops} ops / {n_seqs} seqs: host == "
-              f"device(meshless) == device(1x4)")
+                    f"pool trace diverged ({trace.name} {tag}): "
+                    f"first diff {diff}")
+        n_ord = int(((trace.kinds == wl.KV_SCAN)
+                     | (trace.kinds == wl.KV_PRED)).sum())
+        extra = (f", {n_ord} ordered ops, truncated={truncs}"
+                 if n_ord else "")
+        print(f"  pool trace {trace.name}: host == device(meshless) "
+              f"== device(1x4){extra}")
+        if trace.name.startswith("kv_scan"):
+            assert n_ord > 0, f"{trace.name} carried no ordered ops"
 
     # pool-level page exhaustion: partial reservation rolls nothing over
     tiny = PagedKVPool(2, 4, device=True, index_width=8, index_batch=4)
@@ -204,7 +234,8 @@ def run_bench(n_requests=12, rates=(0.15, 0.4, 1.0), seed=7):
     cfg = registry.get_smoke(ARCH)
     params, _ = zoo.build_params(cfg, jax.random.PRNGKey(0))
     out = {"arch": ARCH, "shards": N_DEV, "n_requests": n_requests,
-           "spill_ok": SPILL_OK, "rates": {}}
+           "spill_ok": SPILL_OK, "exec_mode": kops.exec_mode(),
+           "rates": {}}
 
     parity_ok = True
     for rate in rates:

@@ -44,6 +44,7 @@ import numpy as np                                     # noqa: E402
 from repro.core import device_index as dix             # noqa: E402
 from repro.core import level_arrays as la              # noqa: E402
 from repro.core import splaylist as sx                 # noqa: E402
+from repro.kernels import ops as kops                  # noqa: E402
 from repro.parallel import sharding as shd             # noqa: E402
 
 CMP_FIELDS = ("keys", "widths", "heights", "rank_map")
@@ -89,6 +90,7 @@ def _mixed_stream(rng, pool, n_ops):
 
 def run_parity() -> None:
     W, L = 252, 12
+    print(f"sharded refresh parity: mode={kops.exec_mode()}")
     pool = list(range(0, 160, 2))
     for S in (1, 2, 4):
         mesh = jax.make_mesh((1, S), ("data", "model"))
@@ -266,7 +268,8 @@ def run_bench(width: int = 4096, churn: int = 64, epochs: int = 4,
             err_msg=f"bench parity field={f}")
     itemsize = 4
     return {
-        "mode": "membership", "width": width, "n_levels": n_levels,
+        "mode": "membership", "exec_mode": kops.exec_mode(),
+        "width": width, "n_levels": n_levels,
         "shards": N_DEV, "lanes_per_shard": width // N_DEV,
         "churn_per_epoch": churn, "epochs": epochs,
         "us_per_epoch_replicated": t_repl * 1e6,

@@ -64,6 +64,7 @@ import numpy as np                                     # noqa: E402
 
 from repro.core import device_index as dix             # noqa: E402
 from repro.core import splaylist as sx                 # noqa: E402
+from repro.kernels import ops as kops                  # noqa: E402
 from repro.kernels import splay_search as ssk          # noqa: E402
 from repro.parallel import sharding as shd             # noqa: E402
 
@@ -163,6 +164,7 @@ def _assert_bounds_monotone(plane, mesh, msg):
 
 def run_parity() -> None:
     W, L = 252, 12
+    print(f"sharded search parity: mode={kops.exec_mode()}")
     rng0 = np.random.default_rng(0)
 
     for S in (1, 2, 4):
@@ -506,7 +508,8 @@ def run_bench(width: int = 4096, nq: int = 4096, reps: int = 4,
     itemsize = 4
     capacity = ssk.route_capacity(nq, N_DEV)
     out = {
-        "mode": "zipf_search", "width": width, "n_levels": n_levels,
+        "mode": "zipf_search", "exec_mode": kops.exec_mode(),
+        "width": width, "n_levels": n_levels,
         "shards": N_DEV, "lanes_per_shard": wl_, "nq": nq,
         "occupied_lanes": n_keys,
         "query_block": qb, "routed": bool(routed),

@@ -44,10 +44,19 @@ import numpy as np
 NEG_INF_32 = -(2 ** 31) + 1
 POS_INF_32 = 2 ** 31 - 1
 
-# op kinds for run_ops
+# op kinds for run_ops / run_epoch / run_serving.  The first three are
+# the paper's mutating set ops (result: 0/1 verdict).  OP_PRED and
+# OP_RANGE are the ordered read queries (DESIGN.md §5.10): pure reads —
+# no counter touch, no splay, ``upd`` ignored — whose int32 result is
+# the *answer*, not a verdict: OP_PRED answers the largest live key
+# <= key (NEG_INF_32 when none), OP_RANGE answers the rank count
+# |{live k' : k' <= key}| (a closed prefix-range count; a two-sided
+# [lo, hi] count is the difference of two OP_RANGE lanes).
 OP_CONTAINS = 0
 OP_INSERT = 1
 OP_DELETE = 2
+OP_PRED = 3
+OP_RANGE = 4
 
 HEAD = 0
 TAIL = 1
@@ -417,6 +426,46 @@ def delete(st: SplayState, k, upd) -> Tuple[SplayState, jax.Array, jax.Array]:
     return st, success, steps
 
 
+def _live_mask(st: SplayState) -> jax.Array:
+    """bool [C]: the slots whose keys the ordered queries (and the index
+    plane — same predicate as ``device_index._alive_slots``) see as
+    live: allocated nodes, not delete-marked, sentinels excluded."""
+    idx = jnp.arange(st.capacity)
+    return ((idx >= 2) & (idx < st.n_alloc) & (~st.deleted)
+            & (st.key < POS_INF_32))
+
+
+def predecessor(st: SplayState, k, upd=None) -> Tuple[SplayState,
+                                                      jax.Array,
+                                                      jax.Array]:
+    """The ``OP_PRED`` state walk: largest live key ``<= k``
+    (``NEG_INF_32`` when none), as (state, key, path_len) matching the
+    :func:`run_ops` branch signature.  A pure read — the state comes
+    back untouched and ``upd`` is ignored (ordered queries never splay;
+    DESIGN.md §5.10) — so the answer is bit-identical to the plane's
+    ``kernels.ops.splay_predecessor`` on the epoch snapshot.
+    ``path_len`` is the :func:`find` walk length (the same adaptivity
+    metric as ``contains``)."""
+    del upd
+    _, steps = find(st, k)
+    mask = _live_mask(st) & (st.key <= k)
+    res = jnp.max(jnp.where(mask, st.key, NEG_INF_32))
+    return st, res.astype(jnp.int32), steps
+
+
+def rank_count(st: SplayState, k, upd=None) -> Tuple[SplayState,
+                                                     jax.Array,
+                                                     jax.Array]:
+    """The ``OP_RANGE`` state walk: ``|{live k' : k' <= k}|`` — the
+    closed prefix-range count (the plane answers it as predecessor rank
+    + 1; ``kernels.ops.splay_rank``).  Pure read, ``upd`` ignored;
+    returns (state, count, path_len) like the other op branches."""
+    del upd
+    _, steps = find(st, k)
+    res = jnp.sum((_live_mask(st) & (st.key <= k)).astype(jnp.int32))
+    return st, res, steps
+
+
 # ---------------------------------------------------------------------------
 # rebuild (Section 2.2 "Efficient Rebuild") — JAX-native, vectorized.
 # The paper's recursion is unrolled level-by-level: at relative level r
@@ -579,15 +628,24 @@ def rebuild(st: SplayState) -> SplayState:
 @jax.jit
 def run_ops(st: SplayState, kinds, keys, upd_mask):
     """Apply a stream of operations (scan; lax.switch per op kind).
-    Returns final state plus per-op (result, path_len)."""
+    Returns final state plus per-op (result int32, path_len).  The
+    result lane carries the op's answer: 0/1 verdicts for
+    contains/insert/delete, the predecessor key for ``OP_PRED``, the
+    prefix-range count for ``OP_RANGE`` (see the op-kind constants)."""
 
     def step(s, op):
         kind, k, u = op
+
+        def as_i32(fn):
+            def run(a):
+                s_out, res, plen = fn(a[0], a[1], a[2])
+                return s_out, res.astype(jnp.int32), plen
+            return run
+
         s_out, res, plen = jax.lax.switch(
             kind,
-            [lambda a: contains(a[0], a[1], a[2]),
-             lambda a: insert(a[0], a[1], a[2]),
-             lambda a: delete(a[0], a[1], a[2])],
+            [as_i32(contains), as_i32(insert), as_i32(delete),
+             as_i32(predecessor), as_i32(rank_count)],
             (s, k, u))
         return s_out, (res, plen)
 
@@ -748,12 +806,13 @@ def _check_route_args(route_capacity, route_slack):
                                              "mesh", "axis",
                                              "plane_search", "split",
                                              "route_capacity",
-                                             "route_slack"))
+                                             "route_slack", "ordered"))
 def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
                aggregate: bool = False, max_new: int = None,
                rebuild=False, mesh=None, axis: str = "model",
                plane_search: bool = False, split: str = "lanes",
-               route_capacity: int = None, route_slack: float = None):
+               route_capacity: int = None, route_slack: float = None,
+               ordered: bool = False):
     """One serving epoch entirely on device: apply a batch of operations
     (contains/insert/delete via :func:`run_ops`; ``aggregate=True`` runs
     the flat-combined contains fold of :func:`run_contains_batch`
@@ -790,10 +849,11 @@ def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
     it spill to the masked full-batch trace — answers stay exact, the
     epoch just pays the replicated-trace cost for that batch.
 
-    ``plane_search`` (static; requires ``aggregate=True`` — the answers
-    are membership verdicts, so the batch must be contains-only)
-    answers ``results``/``path_len`` from the carried plane instead of
-    the state walk: ``results`` is the plane's membership verdict and
+    ``plane_search`` (static; requires ``aggregate=True`` — the whole
+    batch must be read-only: ``OP_CONTAINS`` lanes, plus
+    ``OP_PRED``/``OP_RANGE`` lanes when ``ordered``) answers
+    ``results``/``path_len`` from the carried plane instead of the
+    state walk: ``results`` is the plane's membership verdict and
     ``path_len`` is ``level_found`` (the search-depth analogue of the
     walk length; same adaptivity signal, different unit).  The plane
     entering the epoch is the membership snapshot the state-walk
@@ -802,10 +862,26 @@ def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
     exactly the dropped keys until the scheduled rebuild lands;
     ``run_serving``'s state machine bounds that to one epoch).  The
     rebalance fold still runs either way — hit counting is what adapts
-    the structure.
+    the structure, with the hit weight restricted to the
+    ``OP_CONTAINS`` lanes (ordered queries are pure reads and never
+    splay, matching the :func:`run_ops` branches).
 
-    Returns ``(state, plane, results[B], path_len[B], overflow,
-    spill, occupancy)`` where ``overflow`` (int32 scalar) counts alive
+    ``ordered`` (static; DESIGN.md §5.10) grows the ``plane_search``
+    answers to the ordered op codes: ``OP_PRED`` lanes answer the
+    predecessor *key* (``NEG_INF_32`` when none) and ``OP_RANGE`` lanes
+    the prefix-range *count*, both derived from the same descent's
+    bottom-row rank (the pred key costs one extra
+    ``kernels.ops.splay_select`` gather — sharded: one [2, B] psum —
+    which is why the flag is opt-in; ``ordered=False`` is bit-for-bit
+    the membership-only epoch).  Off the ``plane_search`` path the op
+    codes need no flag: :func:`run_ops` answers them from the state
+    walk natively.  Bit-identical across all three paths.
+
+    Returns ``(state, plane, results[B] int32, path_len[B], overflow,
+    spill, occupancy)`` — ``results`` carries per-op answers: 0/1
+    verdicts for contains/insert/delete lanes, predecessor keys /
+    prefix-range counts for ordered lanes (see the op-kind constants).
+    ``overflow`` (int32 scalar) counts alive
     keys the refreshed plane could not represent this epoch: inserts
     beyond ``max_new`` plus alive keys beyond the plane width.  Nonzero
     overflow means the plane is stale until the caller (or
@@ -829,13 +905,14 @@ def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
     occupancy = jnp.zeros((1,), jnp.int32)
     if plane_search:
         if not aggregate:
-            raise ValueError("plane_search answers membership from the "
-                             "index plane — contains-only batches, i.e. "
+            raise ValueError("plane_search answers the batch from the "
+                             "index plane — read-only batches only "
+                             "(contains / ordered queries), i.e. "
                              "aggregate=True")
         from repro.kernels import ops as kops
         from repro.kernels import splay_search as ssk
         if sharded:
-            res, _, plen, rstats = kops.splay_search_sharded(
+            res, rank, plen, rstats = kops.splay_search_sharded(
                 plane, keys, mesh=mesh, axis=axis,
                 capacity=route_capacity,
                 slack=(route_slack if route_slack is not None
@@ -844,13 +921,29 @@ def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
             spill = rstats.spill
             occupancy = rstats.occupancy
         else:
-            res, _, plen = kops.splay_search(plane, keys, sharded=False)
-        st, _, _ = run_contains_batch(st, keys, upd_mask, aggregate=True)
+            res, rank, plen = kops.splay_search(plane, keys,
+                                                sharded=False)
+        upd_eff = upd_mask
+        if ordered:
+            # ordered lanes: answers off the same descent's bottom-row
+            # rank (DESIGN.md §5.10); pure reads, so they carry no hit
+            # weight into the rebalance fold (matches run_ops exactly)
+            pred_keys = kops.splay_select(
+                plane, rank, sharded=sharded,
+                mesh=(mesh if sharded else None), axis=axis)
+            res = jnp.where(
+                kinds == OP_PRED,
+                jnp.where(rank >= 0, pred_keys, jnp.int32(NEG_INF_32)),
+                jnp.where(kinds == OP_RANGE, rank + 1,
+                          res.astype(jnp.int32)))
+            upd_eff = upd_mask & (kinds == OP_CONTAINS)
+        st, _, _ = run_contains_batch(st, keys, upd_eff, aggregate=True)
     elif aggregate:
         st, res, plen = run_contains_batch(st, keys, upd_mask,
                                            aggregate=True)
     else:
         st, res, plen = run_ops(st, kinds, keys, upd_mask)
+    res = res.astype(jnp.int32)
     if max_new is None:
         # an epoch cannot insert more keys than it has ops: bound the
         # refresh's new-key extraction by the batch size
@@ -889,7 +982,8 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
               aggregate: bool = False, max_new: int = None,
               rebuild=False, mesh=None, axis: str = "model",
               plane_search: bool = False, split: str = "lanes",
-              route_capacity: int = None, route_slack: float = None):
+              route_capacity: int = None, route_slack: float = None,
+              ordered: bool = False):
     _check_plane_dispatch(plane, mesh, axis, split)
     _check_route_args(route_capacity, route_slack)
     return _run_epoch(st, plane, kinds, keys, upd_mask,
@@ -897,7 +991,7 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
                       rebuild=rebuild, mesh=mesh, axis=axis,
                       plane_search=plane_search, split=split,
                       route_capacity=route_capacity,
-                      route_slack=route_slack)
+                      route_slack=route_slack, ordered=ordered)
 
 
 run_epoch.__doc__ = _run_epoch.__doc__
@@ -907,19 +1001,24 @@ run_epoch.__doc__ = _run_epoch.__doc__
                                              "mesh", "axis",
                                              "plane_search", "split",
                                              "route_capacity",
-                                             "route_slack"))
+                                             "route_slack", "ordered"))
 def _run_serving(st: SplayState, plane, kinds, keys, upd_mask,
                  aggregate: bool = False, max_new: int = None,
                  mesh=None, axis: str = "model",
                  plane_search: bool = False, split: str = "lanes",
-                 route_capacity: int = None, route_slack: float = None):
+                 route_capacity: int = None, route_slack: float = None,
+                 ordered: bool = False):
     """The jitted epoch *loop*: scan :func:`run_epoch` over ``[E, B]``
     op batches, threading (state, plane, rebuild-pending) through the
     carry — E epochs of search + update + index refresh with zero host
     round-trips of index-plane data.
 
     ``mesh``/``axis``/``plane_search``/``split``/``route_capacity``/
-    ``route_slack`` thread straight into :func:`run_epoch` (DESIGN.md
+    ``route_slack``/``ordered`` thread straight into :func:`run_epoch`
+    (``ordered`` makes the plane-search epochs answer the
+    ``OP_PRED``/``OP_RANGE`` lanes — ordered reads interleaving with
+    the serving stream, DESIGN.md §5.10; results are int32 per-op
+    answers either way) (DESIGN.md
     §5.5–§5.6): with a mesh and a ``shard_index_plane``-laid-out
     plane, every epoch's refresh runs width-sharded and (with
     ``plane_search``) the membership answers come from the *routed*
@@ -960,7 +1059,8 @@ def _run_serving(st: SplayState, plane, kinds, keys, upd_mask,
             s, pl, kd, ks, up, aggregate=aggregate, max_new=max_new,
             rebuild=pending, mesh=mesh, axis=axis,
             plane_search=plane_search, split=split,
-            route_capacity=route_capacity, route_slack=route_slack)
+            route_capacity=route_capacity, route_slack=route_slack,
+            ordered=ordered)
         pressure = s.size + B > width
         pending = (ovf > 0) | (pressure & ~pressed)
         return (s, pl, pending, pressure), (res, plen, ovf, spl, occ)
@@ -975,7 +1075,8 @@ def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
                 aggregate: bool = False, max_new: int = None,
                 mesh=None, axis: str = "model",
                 plane_search: bool = False, split: str = "lanes",
-                route_capacity: int = None, route_slack: float = None):
+                route_capacity: int = None, route_slack: float = None,
+                ordered: bool = False):
     _check_plane_dispatch(plane, mesh, axis, split)
     _check_route_args(route_capacity, route_slack)
     return _run_serving(st, plane, kinds, keys, upd_mask,
@@ -983,7 +1084,7 @@ def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
                         mesh=mesh, axis=axis,
                         plane_search=plane_search, split=split,
                         route_capacity=route_capacity,
-                        route_slack=route_slack)
+                        route_slack=route_slack, ordered=ordered)
 
 
 run_serving.__doc__ = _run_serving.__doc__

@@ -316,8 +316,13 @@ def poisson_zipf_arrivals(n_requests: int, rate: float, vocab: int,
         name=name)
 
 
-# kv-pool request-trace op kinds (serve.kv_cache differential tests)
+# kv-pool request-trace op kinds (serve.kv_cache differential tests).
+# KV_SCAN and KV_PRED are the ordered-query flavors (DESIGN.md §5.10):
+# a KV_SCAN op is an inclusive session-id range lookup [seq_id, hi_id]
+# (pool.lookup_range), a KV_PRED op a predecessor query
+# (pool.predecessor).
 KV_CREATE, KV_LOOKUP, KV_RELEASE = 0, 1, 2
+KV_SCAN, KV_PRED = 3, 4
 
 
 class KVTrace(NamedTuple):
@@ -325,10 +330,15 @@ class KVTrace(NamedTuple):
     interleavings over a bounded session-id space, with deliberate
     re-used ``seq_ids`` (create after release) and misses (lookups of
     absent sessions, double-creates, releases of absent sessions) — the
-    differential fixture for the device-indexed pool (DESIGN.md §5.9)."""
-    kinds: np.ndarray    # int32[T] in {KV_CREATE, KV_LOOKUP, KV_RELEASE}
+    differential fixture for the device-indexed pool (DESIGN.md §5.9).
+    Scan-flavored traces (:func:`kv_scan_trace`) add ``KV_SCAN``/
+    ``KV_PRED`` ordered queries; ``hi_ids`` carries the scan upper
+    bounds (aligned with ``seq_ids``; equal to ``seq_ids`` on
+    non-scan lanes, and ``None`` on membership-only traces)."""
+    kinds: np.ndarray    # int32[T], KV_* op kinds
     seq_ids: np.ndarray  # int32[T]
     name: str
+    hi_ids: np.ndarray = None  # int32[T] scan upper bounds, or None
 
 
 def kv_request_trace(n_ops: int, n_seqs: int, seed: int = 0,
@@ -368,6 +378,49 @@ def kv_request_trace(n_ops: int, n_seqs: int, seed: int = 0,
             pool = dead if (miss and dead) else live
             kinds[t], sids[t] = KV_LOOKUP, rng.choice(pool)
     return KVTrace(kinds=kinds, seq_ids=sids, name=name)
+
+
+def kv_scan_trace(n_ops: int, n_seqs: int, seed: int = 0,
+                  p_scan: float = 0.25, p_pred: float = 0.1,
+                  span: int = 8, p_prefix: float = 0.25,
+                  name: str = "kv_scan_trace") -> KVTrace:
+    """A scan-flavored :class:`KVTrace` (DESIGN.md §5.10): the
+    create/lookup/release mixture of :func:`kv_request_trace` with a
+    ``p_scan`` slice of point lookups replaced by ``KV_SCAN``
+    session-range queries and a ``p_pred`` slice by ``KV_PRED``
+    predecessor queries — the fixture that exercises the pool as an
+    *ordered* index, not a membership filter.
+
+    Scan ranges: anchored at a random id with width ``span`` (drawn in
+    ``[0, span]``, so empty and single-id ranges occur), except a
+    ``p_prefix`` fraction are *prefix* scans ``[0, hi]`` — the "all
+    sessions up to" shape.  Anchors deliberately include dead ids and
+    ids past ``n_seqs`` (out-of-population ranges must answer empty).
+    Deterministic per seed."""
+    base = kv_request_trace(n_ops, n_seqs, seed=seed, name=name)
+    rng = np.random.default_rng(seed + 1)
+    kinds = base.kinds.copy()
+    sids = base.seq_ids.copy()
+    his = sids.copy()
+    for t in range(n_ops):
+        if kinds[t] != KV_LOOKUP:
+            continue
+        u = rng.random()
+        if u < p_scan:
+            kinds[t] = KV_SCAN
+            w = int(rng.integers(0, span + 1))
+            if rng.random() < p_prefix:
+                lo = 0
+                hi = int(rng.integers(0, n_seqs + span))
+            else:
+                lo = int(rng.integers(0, n_seqs + span))
+                hi = lo + w
+            sids[t], his[t] = lo, hi
+        elif u < p_scan + p_pred:
+            kinds[t] = KV_PRED
+            sids[t] = int(rng.integers(0, n_seqs + span))
+            his[t] = sids[t]
+    return KVTrace(kinds=kinds, seq_ids=sids, name=name, hi_ids=his)
 
 
 def zipf_token_ids(rng: np.random.Generator, vocab: int, shape,

@@ -16,6 +16,15 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def exec_mode() -> str:
+    """Execution-mode label for bench payloads and probe prints,
+    derived from the *actual* backend (never hardcoded):
+    ``compiled-tpu`` when the Pallas kernels compile, otherwise
+    ``interpret-<backend>`` (e.g. ``interpret-cpu``)."""
+    return ("compiled-" if on_tpu() else "interpret-") \
+        + jax.default_backend()
+
+
 def splay_search(level_keys, queries, query_block: int = 256,
                  rank_map=None, widths=None, sharded=None,
                  pipelined: bool = None):
@@ -53,6 +62,79 @@ def splay_search_sharded(plane, queries, query_block: int = 256,
         interpret=not on_tpu(), mesh=mesh, axis=axis, routed=routed,
         capacity=capacity, slack=slack, return_stats=return_stats,
         pipelined=pipelined)
+
+
+def splay_predecessor(plane, queries, query_block: int = 256,
+                      sharded=None, pipelined: bool = None):
+    """Largest live key ``<= q`` and its packed-global rank —
+    ``(keys [q], ranks [q])`` int32; ``(NEG_INF_KEY, -1)`` when no
+    predecessor exists.  One descent + one select gather; dispatches
+    replicated/sharded like :func:`splay_search` (DESIGN.md §5.10)."""
+    return ssk.splay_predecessor(
+        plane, queries, query_block=query_block,
+        interpret=not on_tpu(), sharded=sharded, pipelined=pipelined)
+
+
+def splay_successor(plane, queries, query_block: int = 256,
+                    sharded=None, pipelined: bool = None):
+    """Smallest live key ``>= q`` and its packed-global rank —
+    ``(keys [q], ranks [q])`` int32; ``(PAD_KEY, live_count)`` when no
+    successor exists (DESIGN.md §5.10)."""
+    return ssk.splay_successor(
+        plane, queries, query_block=query_block,
+        interpret=not on_tpu(), sharded=sharded, pipelined=pipelined)
+
+
+def splay_rank(plane, queries, query_block: int = 256, sharded=None,
+               pipelined: bool = None):
+    """Number of live keys ``<= q`` (int32 [q]) — the descent's
+    bottom-row predecessor index plus one; one search call
+    (DESIGN.md §5.10)."""
+    return ssk.splay_rank(
+        plane, queries, query_block=query_block,
+        interpret=not on_tpu(), sharded=sharded, pipelined=pipelined)
+
+
+def splay_select(plane, ranks, sharded=None, mesh=None,
+                 axis: str = "model"):
+    """Live key at packed-global rank ``r`` (int32 [q]); ``PAD_KEY``
+    outside ``[0, live_count)``.  Sharded execution gathers each rank
+    from its owning shard's live-lane interval and stitches with one
+    psum (DESIGN.md §5.10)."""
+    return ssk.splay_select(plane, ranks, sharded=sharded, mesh=mesh,
+                            axis=axis)
+
+
+def splay_range_count(plane, lo, hi, query_block: int = 256,
+                      sharded=None, pipelined: bool = None):
+    """Live keys in the inclusive range ``[lo, hi]`` (int32 [q]; 0 for
+    empty/inverted ranges) — a rank pair from one batched descent
+    (DESIGN.md §5.10)."""
+    return ssk.splay_range_count(
+        plane, lo, hi, query_block=query_block,
+        interpret=not on_tpu(), sharded=sharded, pipelined=pipelined)
+
+
+def splay_range_scan(plane, lo, hi, max_range: int,
+                     query_block: int = 256, sharded=None,
+                     pipelined: bool = None):
+    """Range members in key order: ``(keys [q, max_range], count [q],
+    truncated [q])`` — ``count`` is the full population, ``truncated``
+    what the static ``max_range`` capacity cut (counted, never silent);
+    unused lanes hold ``PAD_KEY`` (DESIGN.md §5.10)."""
+    return ssk.splay_range_scan(
+        plane, lo, hi, max_range, query_block=query_block,
+        interpret=not on_tpu(), sharded=sharded, pipelined=pipelined)
+
+
+def splay_top_k(plane, hits, k: int, sharded=None, mesh=None,
+                axis: str = "model"):
+    """The ``k`` hottest live keys by slot-indexed hit mass (the
+    state's ``selfhits``): ``(keys [k], hits [k], ranks [k])`` in
+    descending hit order, ties by ascending rank; ``(PAD_KEY, 0, -1)``
+    past the live count (DESIGN.md §5.10)."""
+    return ssk.splay_top_k(plane, hits, k, sharded=sharded, mesh=mesh,
+                           axis=axis)
 
 
 def splay_search_full(level_keys, queries, query_block: int = 256):

@@ -70,6 +70,17 @@ to the replicate-and-mask trace (the PR-4 path, kept as
 width-sharded plane; gather-to-replicated remains the documented
 fallback (no mesh, one shard, indivisible width, or ``sharded=False``)
 and is all ``splay_search_full`` ever does.
+
+Ordered operations (DESIGN.md §5.10): the descent's bottom-row
+predecessor rank is already an order statistic, so the full ordered-op
+family — ``splay_predecessor``/``splay_successor``, ``splay_rank``/
+``splay_select``, ``splay_range_count``/``splay_range_scan`` (static
+``max_range`` capacity, truncation counted, never silent) and
+``splay_top_k`` by hit mass — derives from the same search kernels plus
+packed bottom-row gathers.  Every op dispatches replicated vs. sharded
+exactly like ``splay_search``; on the sharded plane a rank (or a range
+of ranks) decomposes by the live-lane count prefix into per-shard
+sub-ranges stitched back by one psum.
 """
 
 from __future__ import annotations
@@ -1372,3 +1383,365 @@ def _splay_search_full_arrays(level_keys, queries, query_block: int =
         interpret=interpret,
     )(queries, level_keys)
     return found[:nq], rank[:nq], lvl[:nq]
+
+
+# ---------------------------------------------------------------------------
+# ordered-operation suite (DESIGN.md §5.10): predecessor / successor /
+# rank / select / range-count / range-scan / top-k
+# ---------------------------------------------------------------------------
+
+def _require_plane(level_keys, op: str):
+    """Ordered ops are defined on *packed global ranks*, a plane-level
+    concept — they take an index plane struct, never a bare matrix."""
+    if not hasattr(level_keys, "rank_map"):
+        raise TypeError(
+            f"{op} takes an index plane struct "
+            "(DeviceLevelArrays/LevelArrays), got "
+            f"{type(level_keys).__name__}")
+    return level_keys
+
+
+def _ordered_dispatch(plane, sharded):
+    """The same auto-dispatch rule as :func:`splay_search`: ``None``
+    means sharded exactly when the plane is concretely width-sharded."""
+    if sharded is None:
+        sharded = shd.plane_width_mesh(plane) is not None
+    return bool(sharded)
+
+
+def _usable_width_mesh(plane, axis: str = "model", mesh=None):
+    """The mesh the sharded ordered paths run under, or None when the
+    replicated fallback applies — mirrors the resolution + fallback
+    conditions of :func:`splay_search_sharded` exactly (explicit
+    ``mesh`` argument, else plane layout, else active mesh; axis
+    present; width divisible).  The explicit argument is how in-jit
+    callers (``splaylist._run_epoch``, where the plane is a tracer)
+    reach the sharded path."""
+    mesh = mesh or shd.plane_width_mesh(plane, axis) or shd.active_mesh()
+    width = jnp.asarray(plane.keys).shape[1]
+    if mesh is None or axis not in mesh.shape or width % mesh.shape[axis]:
+        return None
+    return mesh
+
+
+def _select_shard_body(plane, ranks, *, axis: str, n_levels: int):
+    """Per-shard body of the sharded :func:`splay_select` (runs under
+    ``shard_map``; ``plane`` leaves are this shard's blocks, ``ranks``
+    replicated).  Each shard owns the packed-global rank interval
+    ``[lift_s, lift_s + cnt_s)`` — the §5.6 live-lane count prefix from
+    :func:`_route_tables` — because every shard block (packed or
+    mass-segmented) holds its live keys contiguously from lane 0.  The
+    shard gathers its owned ranks from its local bottom row and ONE
+    stacked ``[2, q]`` psum stitches values + ownership; unowned ranks
+    (negative, or past the live count) come back ``PAD_KEY``."""
+    bot = plane.keys[n_levels - 1]
+    wl = bot.shape[0]
+    ax = jax.lax.axis_index(axis).astype(jnp.int32)
+    _, lifts = _route_tables(bot, axis)
+    lift = lifts[ax]
+    cnt = jnp.sum((bot != PAD_KEY).astype(jnp.int32))
+    mine = (ranks >= lift) & (ranks < lift + cnt)
+    loc = jnp.clip(ranks - lift, 0, wl - 1)
+    vals = jnp.where(mine, bot[loc], 0)
+    stacked = jnp.stack([vals, mine.astype(jnp.int32)])
+    v_o, owned = jax.lax.psum(stacked, axis)
+    return jnp.where(owned > 0, v_o, jnp.int32(PAD_KEY))
+
+
+def _topk_shard_body(plane, hits, *, axis: str, n_levels: int, k: int):
+    """Per-shard body of the sharded :func:`splay_top_k`: each shard
+    ranks its own live lanes by hit mass and contributes its local
+    top-``min(k, W/S)`` candidates (any global top-k key is in its
+    owner's local top-k); one ``[S, 3, k_local]`` all_gather + a
+    replicated lexsort on (hits desc, packed-global rank asc) merges
+    them — the same deterministic tie order as ``lax.top_k`` over the
+    packed replicated row, so sharded and replicated answers are
+    bit-identical.  Missing lanes (k past the live count) carry hit −1
+    into the merge and are masked by the wrapper."""
+    bot = plane.keys[n_levels - 1]
+    wl = bot.shape[0]
+    ax = jax.lax.axis_index(axis).astype(jnp.int32)
+    _, lifts = _route_tables(bot, axis)
+    cap = hits.shape[0]
+    live = (bot != PAD_KEY) & (plane.slots >= 0)
+    h = jnp.where(live, hits[jnp.clip(plane.slots, 0, cap - 1)],
+                  jnp.int32(-1))
+    kk = min(k, wl)
+    hv, idx = jax.lax.top_k(h, kk)
+    valid = hv >= 0
+    grank = jnp.where(valid, idx + lifts[ax], jnp.int32(2 ** 31 - 1))
+    kcand = jnp.where(valid, bot[idx], jnp.int32(PAD_KEY))
+    cand = jax.lax.all_gather(jnp.stack([hv, kcand, grank]),
+                              axis)                       # [S, 3, kk]
+    hv_a = cand[:, 0].reshape(-1)
+    key_a = cand[:, 1].reshape(-1)
+    gr_a = cand[:, 2].reshape(-1)
+    order = jnp.lexsort((gr_a, -hv_a))[:k]
+    return key_a[order], hv_a[order], gr_a[order]
+
+
+@functools.lru_cache(maxsize=None)
+def _select_fn(mesh, axis: str, n_levels: int):
+    """Build (and cache) the jitted shard_map of the sharded select for
+    one (mesh, axis, n_levels) cell."""
+    from repro.core.device_index import DeviceLevelArrays
+    specs = shd.index_plane_specs(DeviceLevelArrays, axis)
+    body = functools.partial(_select_shard_body, axis=axis,
+                             n_levels=n_levels)
+    fn = shd.shard_map_compat(body, mesh=mesh, in_specs=(specs, P()),
+                              out_specs=P())
+    return jax.jit(fn)
+
+
+@functools.lru_cache(maxsize=None)
+def _topk_fn(mesh, axis: str, n_levels: int, k: int):
+    """Build (and cache) the jitted shard_map of the sharded top-k for
+    one (mesh, axis, n_levels, k) cell."""
+    from repro.core.device_index import DeviceLevelArrays
+    specs = shd.index_plane_specs(DeviceLevelArrays, axis)
+    body = functools.partial(_topk_shard_body, axis=axis,
+                             n_levels=n_levels, k=k)
+    fn = shd.shard_map_compat(body, mesh=mesh, in_specs=(specs, P()),
+                              out_specs=(P(), P(), P()))
+    return jax.jit(fn)
+
+
+def splay_select(level_keys, ranks, sharded=None, axis: str = "model",
+                 mesh=None):
+    """``select(r)``: the live key at packed-global rank ``r`` (0-based
+    over the sorted live bottom row); ``PAD_KEY`` for any rank outside
+    ``[0, live_count)`` — out-of-range is answered, never raised, so
+    callers compose it under jit.  ``ranks`` int32 [q] → keys int32 [q].
+
+    Sharded execution gathers each rank from the one shard whose
+    live-lane interval contains it and stitches with one psum
+    (:func:`_select_shard_body`) — segmented (mass-split) planes are
+    exact here because every shard block is locally packed.  The
+    replicated path is a plain bottom-row gather and (like every
+    replicated entry point) refuses a segmented plane."""
+    plane = _require_plane(level_keys, "splay_select")
+    ranks = jnp.asarray(ranks, jnp.int32)
+    if ranks.shape[0] == 0:
+        return jnp.zeros((0,), jnp.int32)
+    if mesh is not None or _ordered_dispatch(plane, sharded):
+        mesh = _usable_width_mesh(plane, axis, mesh)
+        if mesh is not None:
+            dplane = _as_device_plane(plane)
+            n_levels = dplane.keys.shape[0]
+            return _select_fn(mesh, axis, n_levels)(dplane, ranks)
+    keys = _replicated(jnp.asarray(plane.keys, jnp.int32))
+    _reject_segmented(keys)
+    n_levels, width = keys.shape
+    bot = keys[n_levels - 1]
+    total = _replicated(jnp.asarray(plane.widths,
+                                    jnp.int32))[n_levels - 1]
+    ok = (ranks >= 0) & (ranks < total)
+    return jnp.where(ok, bot[jnp.clip(ranks, 0, width - 1)],
+                     jnp.int32(PAD_KEY))
+
+
+def splay_rank(level_keys, queries, query_block: int =
+               DEFAULT_QUERY_BLOCK, interpret: bool = True,
+               sharded=None, pipelined: bool = None):
+    """``rank(q)``: the number of live keys ``<= q`` — exactly the
+    descent's bottom-row predecessor index plus one, so this is ONE
+    :func:`splay_search` call (replicated or routed sharded by the same
+    dispatch) and nothing else.  ``queries`` int32 [q] → int32 [q] in
+    ``[0, live_count]``.  The key domain is
+    ``(NEG_INF_KEY, PAD_KEY - 1]``; queries may be any int32 (extremes
+    clamp against the sentinels without changing the count)."""
+    plane = _require_plane(level_keys, "splay_rank")
+    queries = jnp.asarray(queries, jnp.int32)
+    q_eff = jnp.minimum(queries, jnp.int32(PAD_KEY - 1))
+    _, r, _ = splay_search(plane, q_eff, query_block=query_block,
+                           interpret=interpret, sharded=sharded,
+                           pipelined=pipelined)
+    return r + 1
+
+
+def splay_predecessor(level_keys, queries, query_block: int =
+                      DEFAULT_QUERY_BLOCK, interpret: bool = True,
+                      sharded=None, pipelined: bool = None):
+    """``predecessor(q)``: the largest live key ``<= q`` and its
+    packed-global rank — the descent's final window endpoint, lifted to
+    the global rank exactly as membership ranks are.  Returns
+    ``(keys [q] int32, ranks [q] int32)``; no predecessor (q below the
+    smallest live key) answers ``(NEG_INF_KEY, -1)``.  One search plus
+    one :func:`splay_select` gather."""
+    plane = _require_plane(level_keys, "splay_predecessor")
+    queries = jnp.asarray(queries, jnp.int32)
+    q_eff = jnp.minimum(queries, jnp.int32(PAD_KEY - 1))
+    _, r, _ = splay_search(plane, q_eff, query_block=query_block,
+                           interpret=interpret, sharded=sharded,
+                           pipelined=pipelined)
+    keys = splay_select(plane, r, sharded=sharded)
+    return jnp.where(r >= 0, keys, jnp.int32(NEG_INF_KEY)), r
+
+
+def splay_successor(level_keys, queries, query_block: int =
+                    DEFAULT_QUERY_BLOCK, interpret: bool = True,
+                    sharded=None, pipelined: bool = None):
+    """``successor(q)``: the smallest live key ``>= q`` and its
+    packed-global rank.  A membership hit answers ``(q, rank)``
+    directly; a miss answers the key one past the predecessor rank.  No
+    successor (q above the largest live key) answers
+    ``(PAD_KEY, live_count)`` — the select past the live count already
+    yields ``PAD_KEY``, so the rank is the one extra signal."""
+    plane = _require_plane(level_keys, "splay_successor")
+    queries = jnp.asarray(queries, jnp.int32)
+    none = queries >= jnp.int32(PAD_KEY)          # no key >= PAD_KEY
+    q_eff = jnp.minimum(queries, jnp.int32(PAD_KEY - 1))
+    f, r, _ = splay_search(plane, q_eff, query_block=query_block,
+                           interpret=interpret, sharded=sharded,
+                           pipelined=pipelined)
+    r_succ = jnp.where(f & ~none, r, r + 1)
+    keys = splay_select(plane, r_succ, sharded=sharded)
+    keys = jnp.where(f & ~none, q_eff, keys)
+    return jnp.where(none, jnp.int32(PAD_KEY), keys), r_succ
+
+
+def _range_ranks(plane, lo, hi, *, query_block, interpret, sharded,
+                 pipelined):
+    """(start rank, in-range count) of the inclusive key range
+    ``[lo, hi]`` — ONE batched descent over the concatenated endpoint
+    batch (so the routed path pays one exchange for both ends), then
+    pure rank arithmetic: ``count = rank(hi) - |{k < lo}|``, clamped at
+    0 for empty/inverted ranges."""
+    n = lo.shape[0]
+    lo_eff = jnp.minimum(lo, jnp.int32(PAD_KEY - 1))
+    hi_eff = jnp.minimum(hi, jnp.int32(PAD_KEY - 1))
+    f, r, _ = splay_search(plane, jnp.concatenate([lo_eff, hi_eff]),
+                           query_block=query_block, interpret=interpret,
+                           sharded=sharded, pipelined=pipelined)
+    f_lo, r_lo = f[:n], r[:n]
+    r_hi = r[n:]
+    start = jnp.where(f_lo, r_lo, r_lo + 1)       # |{live k < lo}|
+    count = jnp.maximum(r_hi + 1 - start, 0)
+    count = jnp.where(lo >= jnp.int32(PAD_KEY), 0, count)
+    return start, count
+
+
+def splay_range_count(level_keys, lo, hi, query_block: int =
+                      DEFAULT_QUERY_BLOCK, interpret: bool = True,
+                      sharded=None, pipelined: bool = None):
+    """Number of live keys in the inclusive range ``[lo, hi]`` —
+    int32 [q] (0 for empty or inverted ranges).  A rank pair from one
+    batched descent; on the sharded plane a range spanning adjacent
+    owners needs no extra machinery: each endpoint routes to its own
+    owner and the packed-global ranks subtract shard-free."""
+    plane = _require_plane(level_keys, "splay_range_count")
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    if lo.shape != hi.shape:
+        raise ValueError(
+            f"splay_range_count: lo/hi shapes differ: {lo.shape} vs "
+            f"{hi.shape}")
+    if lo.shape[0] == 0:
+        return jnp.zeros((0,), jnp.int32)
+    _, count = _range_ranks(plane, lo, hi, query_block=query_block,
+                            interpret=interpret, sharded=sharded,
+                            pipelined=pipelined)
+    return count
+
+
+def splay_range_scan(level_keys, lo, hi, max_range: int,
+                     query_block: int = DEFAULT_QUERY_BLOCK,
+                     interpret: bool = True, sharded=None,
+                     pipelined: bool = None):
+    """The live keys in the inclusive range ``[lo, hi]``, in key order:
+    a rank pair plus a contiguous bottom-row gather (the gather-first
+    layout's cheap range scan).  Returns
+    ``(keys [q, max_range] int32, count [q] int32, truncated [q]
+    int32)``: ``keys`` holds the first ``min(count, max_range)`` range
+    members and ``PAD_KEY`` beyond them; ``count`` is the FULL in-range
+    population regardless of capacity; ``truncated = max(count -
+    max_range, 0)`` counts what the static capacity cut — truncation is
+    counted, never silent.  ``max_range`` is a static capacity (it
+    shapes the result and the sharded gather's psum wire), so pick it
+    per call site.
+
+    Sharded execution: the endpoint ranks come from the routed
+    exchange and the ``q * max_range`` rank window gathers through
+    :func:`_select_shard_body` — a range spanning adjacent owners
+    decomposes into per-shard sub-ranges by the live-lane count prefix
+    and ONE psum stitches the slices back in rank order."""
+    plane = _require_plane(level_keys, "splay_range_scan")
+    if not isinstance(max_range, int) or isinstance(max_range, bool) \
+            or max_range < 1:
+        raise ValueError(
+            f"splay_range_scan: max_range must be a positive int, got "
+            f"{max_range!r}")
+    lo = jnp.asarray(lo, jnp.int32)
+    hi = jnp.asarray(hi, jnp.int32)
+    if lo.shape != hi.shape:
+        raise ValueError(
+            f"splay_range_scan: lo/hi shapes differ: {lo.shape} vs "
+            f"{hi.shape}")
+    n = lo.shape[0]
+    if n == 0:
+        return (jnp.zeros((0, max_range), jnp.int32),
+                jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32))
+    start, count = _range_ranks(plane, lo, hi, query_block=query_block,
+                                interpret=interpret, sharded=sharded,
+                                pipelined=pipelined)
+    offs = jnp.arange(max_range, dtype=jnp.int32)[None, :]
+    want = offs < jnp.minimum(count, max_range)[:, None]
+    ranks = jnp.where(want, start[:, None] + offs, -1)
+    keys = splay_select(plane, ranks.reshape(-1),
+                        sharded=sharded).reshape(n, max_range)
+    truncated = jnp.maximum(count - max_range, 0)
+    return keys, count, truncated
+
+
+def splay_top_k(level_keys, hits, k: int, sharded=None,
+                axis: str = "model", mesh=None):
+    """The ``k`` hottest live keys by hit mass: ``hits`` is a
+    slot-indexed int32 ``[capacity]`` counter array (the state's
+    ``selfhits``), gathered onto the bottom row through the plane's
+    ``slots`` companion — so this only answers on a device-built plane
+    with a live slot map (host planes carry ``slots = -1`` and report
+    every lane missing).  Returns ``(keys [k], hits [k], ranks [k])``
+    in descending hit order, ties broken by ascending packed-global
+    rank (the ``lax.top_k`` index order); lanes past the live count
+    answer ``(PAD_KEY, 0, -1)``.  ``k`` is static and must not exceed
+    the plane width.
+
+    Sharded execution is a per-shard local top-k + one ``[S, 3, k]``
+    candidate all_gather + a replicated merge — never a replicated
+    ``[W]`` hit row — and is bit-identical to the replicated path
+    (same tie order)."""
+    plane = _require_plane(level_keys, "splay_top_k")
+    if not isinstance(k, int) or isinstance(k, bool) or k < 1:
+        raise ValueError(f"splay_top_k: k must be a positive int, got "
+                         f"{k!r}")
+    width = jnp.asarray(plane.keys).shape[1]
+    if k > width:
+        raise ValueError(
+            f"splay_top_k: k={k} exceeds the plane width {width}")
+    hits = jnp.asarray(hits, jnp.int32)
+    if mesh is not None or _ordered_dispatch(plane, sharded):
+        mesh = _usable_width_mesh(plane, axis, mesh)
+        if mesh is not None:
+            dplane = _as_device_plane(plane)
+            n_levels = dplane.keys.shape[0]
+            keys, hv, ranks = _topk_fn(mesh, axis, n_levels,
+                                       k)(dplane, hits)
+            valid = hv >= 0
+            return (jnp.where(valid, keys, jnp.int32(PAD_KEY)),
+                    jnp.maximum(hv, 0),
+                    jnp.where(valid, ranks, -1))
+    keys = _replicated(jnp.asarray(plane.keys, jnp.int32))
+    _reject_segmented(keys)
+    n_levels, _ = keys.shape
+    bot = keys[n_levels - 1]
+    slots = _replicated(jnp.asarray(plane.slots, jnp.int32)) \
+        if hasattr(plane, "slots") else jnp.full((width,), -1, jnp.int32)
+    cap = hits.shape[0]
+    live = (bot != PAD_KEY) & (slots >= 0)
+    h = jnp.where(live, hits[jnp.clip(slots, 0, cap - 1)],
+                  jnp.int32(-1))
+    hv, idx = jax.lax.top_k(h, k)
+    valid = hv >= 0
+    return (jnp.where(valid, bot[idx], jnp.int32(PAD_KEY)),
+            jnp.maximum(hv, 0),
+            jnp.where(valid, idx, -1))

@@ -35,8 +35,10 @@ def splay_demo(args) -> dict:
     import jax.numpy as jnp
     from repro.core import device_index as dix
     from repro.core import splaylist as sx
+    from repro.kernels import ops as kops
     from repro.parallel import sharding as shd
 
+    print(f"splay demo: mode={kops.exec_mode()}")
     rng = np.random.default_rng(args.seed)
     cap, L = 2050, 16
     W = cap - 2                      # 2048: divides 2/4/8-way meshes
@@ -60,7 +62,7 @@ def splay_demo(args) -> dict:
         st, plane, jnp.asarray(kinds), jnp.asarray(keys),
         jnp.asarray(ups))
     out = {
-        "epochs": E, "batch": B,
+        "epochs": E, "batch": B, "exec_mode": kops.exec_mode(),
         "hit_rate": float(np.asarray(res).mean()),
         "mean_path": float(np.asarray(plen).mean()),
         "overflow_epochs": int((np.asarray(ovf) > 0).sum()),

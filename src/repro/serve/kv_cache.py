@@ -1,10 +1,12 @@
 """Paged KV-cache pool with a splay-list page index.
 
 Pages of ``page_size`` positions are pooled; each sequence owns a chain
-of pages.  The *index* mapping (seq_id -> present) is a splay-list, so
-lookups for hot sessions are O(log(m/f)) — the paper's structure doing
-real work in the serving path.  (The dense cache used by decode cells
-lives in model_zoo.init_cache; this pool backs the engine's session
+of pages.  The session *index* is a splay-list — a sorted, ordered
+index, not just a membership filter: lookups for hot sessions are
+O(log(m/f)), and the same structure answers ordered queries
+(``predecessor``, ``lookup_range`` — DESIGN.md §5.10) over the live
+session-id space.  (The dense cache used by decode cells lives in
+model_zoo.init_cache; this pool backs the engine's session
 management.)
 
 Two index backends (DESIGN.md §5.9):
@@ -68,7 +70,8 @@ class PagedKVPool:
         self.device = bool(device)
         self.stats = {"lookups": 0, "plane_queries": 0, "plane_epochs": 0,
                       "flush_epochs": 0, "spill": 0, "rebuilds": 0,
-                      "create_rejects": 0}
+                      "create_rejects": 0, "range_queries": 0,
+                      "range_truncated": 0, "pred_queries": 0}
         if not self.device:
             self.index = SplayList(max_level=max_level, p=p)
             return
@@ -105,9 +108,12 @@ class PagedKVPool:
 
     # -- device epochs ----------------------------------------------------
 
-    def _epoch(self, kinds, keys, upd, aggregate, plane_search):
+    def _epoch(self, kinds, keys, upd, aggregate, plane_search,
+               ordered=False):
         """One padded op/lookup epoch through ``run_epoch``, stepping
-        the overflow machine and (on lookup epochs) the controller."""
+        the overflow machine and (on lookup epochs) the controller.
+        ``ordered`` lets the plane-search epoch answer
+        ``OP_PRED``/``OP_RANGE`` lanes (DESIGN.md §5.10)."""
         sx, rc = self._sx, self._rc
         B = kinds.shape[0]
         rebuild = self._rebuild_pending or self.ctrl.force_rebuild
@@ -121,7 +127,8 @@ class PagedKVPool:
             plane_search=plane_search,
             split=self.ctrl.split if sharded else "lanes",
             route_slack=(self.ctrl.slack_of(self.ctrl_cfg)
-                         if sharded else None))
+                         if sharded else None),
+            ordered=ordered)
         self._st, self._plane = st, plane
         self._rebuild_pending, self._pressed = rc.overflow_machine_step(
             int(ovf), int(st.size), B, self.index_width, self._pressed)
@@ -183,6 +190,61 @@ class PagedKVPool:
             out[i:i + n] = res[:n]
             self.stats["plane_queries"] += n
         return out
+
+    def predecessor(self, seq_id: int) -> Optional[int]:
+        """Largest live session id ``<= seq_id``, or ``None`` — the pool
+        as an *ordered* index (DESIGN.md §5.10).  Device mode answers
+        from the plane through an ordered ``OP_PRED`` epoch (routed
+        sharded under a mesh, feeding the controller the same RouteStats
+        as membership epochs); host mode scans its live-set metadata
+        (which mirrors the host index exactly).  Bit-identical across
+        backends on any trace."""
+        self.stats["pred_queries"] += 1
+        if not self.device:
+            cand = [s for s in self.chains if s <= seq_id]
+            return max(cand) if cand else None
+        self._flush()
+        sx = self._sx
+        B = self.index_batch
+        kd, ks, up, _ = sx.pad_op_batch(
+            np.array([sx.OP_PRED], np.int32),
+            np.array([int(seq_id)], np.int32), np.zeros(1, bool), B)
+        res = self._epoch(kd, ks, up, aggregate=True, plane_search=True,
+                          ordered=True)
+        self.stats["plane_queries"] += 1
+        pred = int(res[0])
+        return None if pred == self._sx.NEG_INF_32 else pred
+
+    def lookup_range(self, lo: int, hi: int, max_range: int = None):
+        """Live session ids in the inclusive id range ``[lo, hi]``, in
+        ascending order — ``(ids int64[n], count, truncated)`` with
+        ``n = min(count, max_range)``; ``count`` is the full in-range
+        population and ``truncated`` what the capacity cut (counted,
+        never silent — the ``range_scan`` contract).  ``max_range``
+        defaults to ``index_batch``.  Device mode is a plane
+        ``splay_range_scan`` (a rank pair + a bottom-row gather; routed
+        sharded under a mesh) on the flushed snapshot; host mode scans
+        its live-set metadata.  Bit-identical across backends."""
+        if max_range is None:
+            max_range = self.index_batch if self.device else 32
+        self.stats["range_queries"] += 1
+        if not self.device:
+            ids = np.asarray(sorted(s for s in self.chains
+                                    if lo <= s <= hi), np.int64)
+            count = ids.size
+            truncated = max(count - max_range, 0)
+            self.stats["range_truncated"] += truncated
+            return ids[:max_range], count, truncated
+        self._flush()
+        from repro.kernels import ops as kops
+        keys, cnt, tr = kops.splay_range_scan(
+            self._plane, np.array([int(lo)], np.int32),
+            np.array([int(hi)], np.int32), max_range=int(max_range))
+        self.stats["plane_queries"] += 1
+        count, truncated = int(cnt[0]), int(tr[0])
+        self.stats["range_truncated"] += truncated
+        ids = np.asarray(keys[0], np.int64)[:min(count, max_range)]
+        return ids, count, truncated
 
     # -- pool API ---------------------------------------------------------
 
