@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src:.
 
 .PHONY: test bench-smoke bench bench-sharded-search bench-drift \
-	bench-serving bench-ordered check-docs
+	bench-serving bench-ordered bench-chaos check-docs
 
 # tier-1: the full pytest suite (ROADMAP "Tier-1 verify")
 test:
@@ -65,6 +65,20 @@ bench-serving:
 # --bench subprocess).
 bench-ordered:
 	$(PY) benchmarks/ordered_search_probe.py --parity
+
+# chaos-injection recovery battery (DESIGN.md §5.11): plane fsck
+# detects every injected fault family within one audit epoch, degraded
+# serving (routed -> masked -> host oracle) never serves a wrong
+# verdict and recovers to routed within the bound, crash-consistent
+# snapshots replay the pending-op buffer exactly once, and restores
+# are bit-identical across host / meshless / 1x4-mesh backends
+# (shrunk-mesh restores included).  Self-asserting; the CI "Chaos
+# recovery" step and the nightly bench job invoke exactly this target.
+# The committed metrics entry lives in the chaos_recovery key of
+# BENCH_kernels.json (via kernels_bench's chaos_probe --bench
+# subprocess).
+bench-chaos:
+	$(PY) benchmarks/chaos_probe.py --parity
 
 # docs gate: docs/API.md names resolve against the modules; the README
 # quickstart blocks execute (scripts/check_api_docs.py, CI `docs` job)

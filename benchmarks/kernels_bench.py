@@ -426,6 +426,31 @@ def _serving_case(n_requests: int) -> dict:
     return out
 
 
+def _chaos_case() -> dict:
+    """Chaos-injection recovery battery (DESIGN.md §5.11):
+    ``benchmarks/chaos_probe.py --bench`` in a subprocess (forced 1x4
+    host mesh) — plane-fsck detection per fault family, zero-wrong-
+    verdict degraded serving with bounded recovery, crash-consistent
+    snapshot replay, and cross-backend restore bit-identity.  CI gates
+    on detected==injected, wrong_verdicts==0, recovery within bound,
+    and the restore/replay flags."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)            # probe forces its own count
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, "benchmarks/chaos_probe.py", "--bench"],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=3600)
+    assert r.returncode == 0, f"chaos probe failed:" \
+                              f"\n{r.stdout[-2000:]}\n{r.stderr[-2000:]}"
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    emit("chaos_recovery", out["recovery_epochs_max"],
+         f"detected={out['detected']}/{out['injected']};"
+         f"wrong={out['wrong_verdicts']};"
+         f"restore_ok={out['restore_bit_identical']};"
+         f"replay_once={out['replay_exactly_once']}")
+    return out
+
+
 def _sharded_refresh_case(width: int) -> dict:
     """Sharded-vs-replicated refresh race on a forced host mesh
     (DESIGN.md §5.4).  The mesh needs
@@ -539,6 +564,10 @@ def run(quick: bool = False) -> dict:
     # (DESIGN.md §5.9): request-level latency under offered load, with
     # the parity flag and steady-state spill gated in CI
     payload["serving_engine"] = _serving_case(8 if quick else 16)
+    # fault-injection recovery (DESIGN.md §5.11): fsck detection,
+    # zero-wrong-verdict degradation, crash-consistent restore — the
+    # CI "Chaos recovery" gate reads this entry
+    payload["chaos_recovery"] = _chaos_case()
 
     # hot_gather: bytes-touched model (hot hits avoid HBM entirely); the
     # hot set comes from observed counts, as the splay heights do

@@ -54,6 +54,7 @@ def routed_sharded_serving_demo():
     Zipf-skewed contains batches answered by the routed sharded search,
     refreshed with the mass-weighted boundary re-split."""
     from repro.core import device_index as dix
+    from repro.core import plane_check as pc
     from repro.core import route_controller as rc
     from repro.core import splaylist as sx
     from repro.kernels import splay_search as ssk
@@ -77,6 +78,10 @@ def routed_sharded_serving_demo():
     mesh = jax.make_mesh((1, n_dev), ("data", "model"))
     plane = dix.from_state_device(st, n_levels=L, width=W)
     plane_s = shd.shard_index_plane(plane, mesh)
+    # plane fsck (DESIGN.md §5.11) at each refresh boundary: the
+    # auditor re-derives every invariant the search kernels assume;
+    # clean planes print exactly "audit OK"
+    print(f"build {pc.audit_summary(pc.audit_plane(st, plane))}")
 
     # Zipf-skewed contains epochs: hot keys get hammered, so the hit
     # counters skew and the mass re-split has something to balance.
@@ -101,6 +106,8 @@ def routed_sharded_serving_demo():
         st, plane_s, jnp.asarray(kinds), jnp.asarray(keys),
         jnp.asarray(ups), aggregate=True, plane_search=True,
         mesh=mesh, split="mass")
+    nseg = n_dev if dix.plane_is_segmented(plane2) else 1
+    print(f"serving {pc.audit_summary(pc.audit_plane(st2, plane2, n_segments=nseg))}")
 
     # the routed exchange's balance on the final (re-split) plane
     _, _, _, stats = ssk.splay_search_sharded(

@@ -67,7 +67,9 @@ def check_api_names() -> int:
 
 # the documented-surface modules: every public name they export must
 # carry a dotted reference in docs/API.md (check 2)
-SURFACE_MODULES = ("repro.kernels.ops", "repro.core.splaylist")
+SURFACE_MODULES = ("repro.kernels.ops", "repro.core.splaylist",
+                   "repro.core.plane_check", "repro.core.faults",
+                   "repro.serve.snapshot")
 
 
 def _public_names(mod) -> list:

@@ -47,7 +47,8 @@ from repro.kernels.splay_search import DEFAULT_ROUTE_SLACK, route_capacity
 
 __all__ = [
     "ControllerConfig", "ControllerState", "default_slack_ladder",
-    "init_controller", "controller_step", "overflow_machine_step",
+    "init_controller", "controller_step", "controller_to_dict",
+    "controller_from_dict", "overflow_machine_step",
     "run_serving_controlled", "max_share", "routing_gini",
 ]
 
@@ -172,6 +173,32 @@ def init_controller(n_shards: int, **overrides
                 key=lambda i: (abs(cfg.slack_ladder[i]
                                    - DEFAULT_ROUTE_SLACK), i))
     return cfg, ControllerState(slack_idx=start)
+
+
+def controller_to_dict(cfg: ControllerConfig,
+                       state: ControllerState) -> dict:
+    """JSON-safe serialization of the whole controller (config +
+    carry) for the §5.11 crash-consistent serving snapshot.  Every
+    field is a plain int/float/str/bool/list, so the dict survives a
+    ``json.dumps`` round-trip bit-identically — the restored
+    controller continues the slack ladder, calm streaks, and doubling
+    backoff exactly where the crashed one stopped (pinned by
+    ``tests/test_route_controller.py``)."""
+    c = cfg._asdict()
+    c["slack_ladder"] = [float(s) for s in cfg.slack_ladder]
+    s = state._asdict()
+    s["force_rebuild"] = bool(state.force_rebuild)
+    return {"config": c, "state": s}
+
+
+def controller_from_dict(d: dict
+                         ) -> Tuple[ControllerConfig, ControllerState]:
+    """Inverse of :func:`controller_to_dict`."""
+    c = dict(d["config"])
+    c["slack_ladder"] = tuple(float(s) for s in c["slack_ladder"])
+    cfg = ControllerConfig(**c)
+    state = ControllerState(**d["state"])
+    return cfg, state
 
 
 # ---------------------------------------------------------------------------

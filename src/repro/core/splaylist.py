@@ -806,13 +806,14 @@ def _check_route_args(route_capacity, route_slack):
                                              "mesh", "axis",
                                              "plane_search", "split",
                                              "route_capacity",
-                                             "route_slack", "ordered"))
+                                             "route_slack", "ordered",
+                                             "routed"))
 def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
                aggregate: bool = False, max_new: int = None,
                rebuild=False, mesh=None, axis: str = "model",
                plane_search: bool = False, split: str = "lanes",
                route_capacity: int = None, route_slack: float = None,
-               ordered: bool = False):
+               ordered: bool = False, routed: bool = True):
     """One serving epoch entirely on device: apply a batch of operations
     (contains/insert/delete via :func:`run_ops`; ``aggregate=True`` runs
     the flat-combined contains fold of :func:`run_contains_batch`
@@ -896,7 +897,17 @@ def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
     exchange's per-shard live-query counts (``RouteStats.occupancy``;
     sums to B) on that same path, and a single-element zero vector on
     every other path — the balance signal the routing controller
-    (``core.route_controller``, DESIGN.md §5.7) feeds on."""
+    (``core.route_controller``, DESIGN.md §5.7) feeds on.
+
+    ``routed`` (static, default True) selects the sharded
+    ``plane_search`` execution mode: ``False`` answers the batch
+    through the *masked replicated trace* instead of the routed
+    all_to_all exchange — bit-identical verdicts, no routing, no
+    spill.  This is rung 1 of the §5.11 degradation ladder: the
+    serving loop drops to it after an audit failure or shard loss
+    because the masked trace has no per-shard capacity to overrun
+    while the plane is being repaired.  Inert off the sharded
+    ``plane_search`` path."""
     from repro.core import device_index as dix
     n_levels, width = plane.keys.shape
     sharded = (mesh is not None and axis in mesh.shape
@@ -913,7 +924,7 @@ def _run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
         from repro.kernels import splay_search as ssk
         if sharded:
             res, rank, plen, rstats = kops.splay_search_sharded(
-                plane, keys, mesh=mesh, axis=axis,
+                plane, keys, mesh=mesh, axis=axis, routed=routed,
                 capacity=route_capacity,
                 slack=(route_slack if route_slack is not None
                        else ssk.DEFAULT_ROUTE_SLACK),
@@ -983,7 +994,7 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
               rebuild=False, mesh=None, axis: str = "model",
               plane_search: bool = False, split: str = "lanes",
               route_capacity: int = None, route_slack: float = None,
-              ordered: bool = False):
+              ordered: bool = False, routed: bool = True):
     _check_plane_dispatch(plane, mesh, axis, split)
     _check_route_args(route_capacity, route_slack)
     return _run_epoch(st, plane, kinds, keys, upd_mask,
@@ -991,7 +1002,8 @@ def run_epoch(st: SplayState, plane, kinds, keys, upd_mask,
                       rebuild=rebuild, mesh=mesh, axis=axis,
                       plane_search=plane_search, split=split,
                       route_capacity=route_capacity,
-                      route_slack=route_slack, ordered=ordered)
+                      route_slack=route_slack, ordered=ordered,
+                      routed=routed)
 
 
 run_epoch.__doc__ = _run_epoch.__doc__
@@ -1001,13 +1013,14 @@ run_epoch.__doc__ = _run_epoch.__doc__
                                              "mesh", "axis",
                                              "plane_search", "split",
                                              "route_capacity",
-                                             "route_slack", "ordered"))
+                                             "route_slack", "ordered",
+                                             "routed"))
 def _run_serving(st: SplayState, plane, kinds, keys, upd_mask,
                  aggregate: bool = False, max_new: int = None,
                  mesh=None, axis: str = "model",
                  plane_search: bool = False, split: str = "lanes",
                  route_capacity: int = None, route_slack: float = None,
-                 ordered: bool = False):
+                 ordered: bool = False, routed: bool = True):
     """The jitted epoch *loop*: scan :func:`run_epoch` over ``[E, B]``
     op batches, threading (state, plane, rebuild-pending) through the
     carry — E epochs of search + update + index refresh with zero host
@@ -1060,7 +1073,7 @@ def _run_serving(st: SplayState, plane, kinds, keys, upd_mask,
             rebuild=pending, mesh=mesh, axis=axis,
             plane_search=plane_search, split=split,
             route_capacity=route_capacity, route_slack=route_slack,
-            ordered=ordered)
+            ordered=ordered, routed=routed)
         pressure = s.size + B > width
         pending = (ovf > 0) | (pressure & ~pressed)
         return (s, pl, pending, pressure), (res, plen, ovf, spl, occ)
@@ -1076,7 +1089,7 @@ def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
                 mesh=None, axis: str = "model",
                 plane_search: bool = False, split: str = "lanes",
                 route_capacity: int = None, route_slack: float = None,
-                ordered: bool = False):
+                ordered: bool = False, routed: bool = True):
     _check_plane_dispatch(plane, mesh, axis, split)
     _check_route_args(route_capacity, route_slack)
     return _run_serving(st, plane, kinds, keys, upd_mask,
@@ -1084,7 +1097,8 @@ def run_serving(st: SplayState, plane, kinds, keys, upd_mask,
                         mesh=mesh, axis=axis,
                         plane_search=plane_search, split=split,
                         route_capacity=route_capacity,
-                        route_slack=route_slack, ordered=ordered)
+                        route_slack=route_slack, ordered=ordered,
+                        routed=routed)
 
 
 run_serving.__doc__ = _run_serving.__doc__

@@ -34,6 +34,7 @@ def splay_demo(args) -> dict:
     §5.4)."""
     import jax.numpy as jnp
     from repro.core import device_index as dix
+    from repro.core import plane_check as pc
     from repro.core import splaylist as sx
     from repro.kernels import ops as kops
     from repro.parallel import sharding as shd
@@ -48,6 +49,9 @@ def splay_demo(args) -> dict:
         st, jnp.full((len(pool),), sx.OP_INSERT, jnp.int32),
         jnp.asarray(pool), jnp.ones((len(pool),), bool))
     plane = dix.from_state_device(st, n_levels=L, width=W)
+    # plane fsck (DESIGN.md §5.11) at every refresh boundary: a clean
+    # plane prints exactly "audit OK"
+    print(f"build {pc.audit_summary(pc.audit_plane(st, plane))}")
 
     E, B = args.epochs, args.batch
     hot = rng.choice(pool, max(B // 16, 1))
@@ -72,6 +76,8 @@ def splay_demo(args) -> dict:
           f"{out['hit_rate']:.2f}, mean path {out['mean_path']:.1f}, "
           f"overflow epochs {out['overflow_epochs']}, "
           f"alive {out['alive']}/{W}")
+    out["audit"] = pc.audit_summary(pc.audit_plane(st2, plane2))
+    print(f"serving {out['audit']}")
 
     n_dev = len(jax.devices())
     if n_dev > 1 and W % n_dev == 0:
@@ -144,6 +150,8 @@ def splay_demo(args) -> dict:
         refresh_match = all(
             (np.asarray(getattr(ps, f)) == np.asarray(getattr(pr, f))).all()
             for f in ("keys", "widths", "heights", "rank_map"))
+        print(f"sharded refresh "
+              f"{pc.audit_summary(pc.audit_plane(st3, ps))}")
 
         # the closed loop (DESIGN.md §5.7): the routing controller
         # steering slack/split/rebuild from the spill+occupancy
@@ -218,6 +226,17 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate in requests per decode "
                          "step (0 = the legacy burst-at-zero queue)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="publish a crash-consistent serving snapshot "
+                         "(pool + index + controller + engine queue) "
+                         "here after the run")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest snapshot from "
+                         "--snapshot-dir before serving (auto-resume; "
+                         "a fresh start if the directory is empty)")
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="run the plane fsck every K lookup epochs on "
+                         "the device index (0 = off)")
     args = ap.parse_args(argv)
 
     if args.splay_demo:
@@ -227,7 +246,19 @@ def main(argv=None):
            else registry.get(args.arch))
     params, _ = zoo.build_params(cfg, jax.random.PRNGKey(args.seed))
     eng = Engine(cfg, params, max_batch=args.max_batch, max_seq=128,
-                 device_index=args.device_index)
+                 device_index=args.device_index,
+                 audit_every=args.audit_every)
+    mgr = None
+    if args.snapshot_dir:
+        from repro.serve import snapshot as snap
+        from repro.train.checkpoint import CheckpointManager
+        mgr = CheckpointManager(args.snapshot_dir)
+        if args.resume and mgr.latest_step() is not None:
+            pool, eng_state, summary = snap.restore_serving_snapshot(
+                mgr, audit_every=args.audit_every or None)
+            eng.pool = pool
+            snap.apply_engine_state(eng, eng_state)
+            print(summary)
     arrivals = workload.poisson_zipf_arrivals(
         args.requests, args.rate if args.rate > 0 else float("inf"),
         cfg.vocab, prompt_len=(2, 7), max_new=args.max_new,
@@ -246,7 +277,16 @@ def main(argv=None):
     p50 = lat[len(lat) // 2] if lat else 0
     print(f"served {len(results)} sequences; pool util "
           f"{eng.pool.utilization:.2f}; p50 latency {p50} steps; "
-          f"stalls {eng.stalls}; preemptions {eng.preemptions}")
+          f"stalls {eng.stalls}; preemptions {eng.preemptions}; "
+          f"degraded retries {eng.degraded_retries}")
+    if eng.pool.device and args.audit_every:
+        from repro.core import plane_check as pc
+        print(pc.audit_summary(eng.pool.audit()))
+    if mgr is not None:
+        from repro.serve import snapshot as snap
+        snap.save_serving_snapshot(mgr, eng.clock, eng.pool, engine=eng)
+        print(f"saved serving snapshot step {eng.clock} "
+              f"to {args.snapshot_dir}")
     return results
 
 

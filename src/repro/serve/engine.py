@@ -59,7 +59,8 @@ class Engine:
                  n_pages: int = 1024, page_size: int = 16,
                  device_index: bool = False, index_batch: int = 32,
                  index_width: int = None, mesh=None,
-                 stream_epochs: int = 4):
+                 stream_epochs: int = 4, audit_every: int = 0,
+                 fault_plan=None, max_retries: int = 8):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -67,7 +68,9 @@ class Engine:
         self.pool = PagedKVPool(n_pages=n_pages, page_size=page_size,
                                 device=device_index,
                                 index_width=index_width,
-                                index_batch=index_batch, mesh=mesh)
+                                index_batch=index_batch, mesh=mesh,
+                                audit_every=audit_every,
+                                fault_plan=fault_plan)
         self.vocab_cache = (SplayVocabCache(cfg.vocab_padded,
                                             hot_size=cfg.hot_vocab)
                             if use_splay_tier else None)
@@ -81,6 +84,12 @@ class Engine:
         self.tokens_out = 0
         self.stalls = 0              # admission refusals (backpressure)
         self.preemptions = 0         # mid-decode page-exhaustion requeues
+        # §5.11 degraded-epoch retry: transient injected/degraded
+        # faults requeue the wave and back off (doubling), never raise
+        self.max_retries = max_retries
+        self.degraded_retries = 0
+        self._backoff = 1            # virtual-time retry delay (doubles)
+        self._consec_fail = 0
 
     def submit(self, req: Request) -> None:
         """Enqueue a request; it is admitted (pages reserved) once the
@@ -145,8 +154,15 @@ class Engine:
         """Serve the queue to completion; returns seq_id -> generated
         ids.  Advances the virtual clock through idle gaps, admits
         waves as requests arrive, and records per-request latency
-        (completion clock minus arrival) in ``self.latencies``."""
+        (completion clock minus arrival) in ``self.latencies``.
+
+        Degraded epochs (an injected fault surfacing mid-wave —
+        ``core.faults.InjectedFault``) do not raise: the wave's
+        unfinished requests requeue and the engine retries after a
+        doubling virtual-time backoff (DESIGN.md §5.11), up to
+        ``max_retries`` consecutive failures."""
         results: Dict[int, List[int]] = {}
+        from repro.core.faults import InjectedFault
         while self.queue:
             wave = self._admit()
             if not wave:
@@ -158,7 +174,19 @@ class Engine:
                     f"request seq_id={self.queue[0].seq_id} cannot be "
                     f"admitted into an empty engine (prompt needs more "
                     f"pages than the pool holds / index full)")
-            self._serve_wave(wave, results)
+            try:
+                self._serve_wave(wave, results)
+            except InjectedFault:
+                self.degraded_retries += 1
+                self._consec_fail += 1
+                if self._consec_fail > self.max_retries:
+                    raise   # persistent, not transient: surface it
+                self._requeue_wave(wave, results)
+                self.clock += self._backoff
+                self._backoff *= 2
+                continue
+            self._backoff = 1
+            self._consec_fail = 0
         if self._stream_buf and self.vocab_cache is not None:
             pad = [np.full(self.max_batch, -1, np.int32)] * \
                 (self.stream_epochs - len(self._stream_buf))
@@ -166,6 +194,20 @@ class Engine:
                 np.stack(self._stream_buf + pad))
             self._stream_buf = []
         return results
+
+    def _requeue_wave(self, wave: List[Request],
+                      results: Dict[int, List[int]]) -> None:
+        """Roll a faulted wave back into the queue: every request not
+        yet completed (and not already requeued by a preemption inside
+        the wave) releases its session and resubmits with its original
+        arrival, so latency spans the retry."""
+        for r in wave:
+            if r.seq_id in results:
+                continue             # finished before the fault hit
+            if any(q is r for q in self.queue):
+                continue             # preempt-requeued inside the wave
+            self.pool.release(r.seq_id)
+            self.submit(r)
 
     def _serve_wave(self, wave: List[Request],
                     results: Dict[int, List[int]]) -> None:

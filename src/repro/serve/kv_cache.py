@@ -32,6 +32,23 @@ Two index backends (DESIGN.md §5.9):
 Page bookkeeping (free list, chains, lengths) stays host-side in both
 modes: it is O(1) dict/list metadata per request, not index search
 work — the host/device cut puts only the searched structure on device.
+
+Fault tolerance (DESIGN.md §5.11): with ``audit_every=K`` the pool runs
+the ``core.plane_check`` fsck over ``(state, plane)`` every K lookup
+entries (and on every entry while degraded).  On an audit failure or a
+reported shard loss it walks an explicit degradation ladder — rung 0
+the routed sharded search, rung 1 the masked replicated trace
+(``routed=False``), rung 2 the host ``ref_py`` oracle — answering every
+query from the highest rung it can *prove* correct, so a corrupted
+plane never serves a verdict.  Repair is the existing edge-triggered
+force-rebuild machine (one ``from_state_device`` rebuild epoch; the
+state is the authority), and the pool climbs one rung per clean pass so
+recovery to routed steady state is bounded.  A ``core.faults.FaultPlan``
+injects deterministic chaos between the mutation flush and the lookup
+answer; everything is counted in ``stats`` (``audits``,
+``audit_failures``, ``repairs``, ``degraded_masked``, ``degraded_host``,
+``remeshes``, ``telemetry_dropped``, ``faults_injected``) and the whole
+ladder is gated by ``benchmarks/chaos_probe.py``.
 """
 
 from __future__ import annotations
@@ -61,17 +78,36 @@ class PagedKVPool:
     def __init__(self, n_pages: int, page_size: int, max_level: int = 24,
                  p: float = 0.1, device: bool = False,
                  index_width: int = None, index_batch: int = 32,
-                 mesh=None, axis: str = "model"):
+                 mesh=None, axis: str = "model",
+                 audit_every: int = 0, fault_plan=None):
         self.n_pages = n_pages
         self.page_size = page_size
         self.free: List[int] = list(range(n_pages))
         self.chains: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}
         self.device = bool(device)
+        self._max_level = int(max_level)
+        self._p = float(p)
         self.stats = {"lookups": 0, "plane_queries": 0, "plane_epochs": 0,
                       "flush_epochs": 0, "spill": 0, "rebuilds": 0,
                       "create_rejects": 0, "range_queries": 0,
-                      "range_truncated": 0, "pred_queries": 0}
+                      "range_truncated": 0, "pred_queries": 0,
+                      "audits": 0, "audit_failures": 0, "repairs": 0,
+                      "degraded_masked": 0, "degraded_host": 0,
+                      "remeshes": 0, "telemetry_dropped": 0,
+                      "faults_injected": 0}
+        # §5.11 fault-tolerance knobs (device mode; inert on host —
+        # the reference list IS the rung-2 oracle)
+        self.audit_every = int(audit_every)
+        self.fault_plan = fault_plan
+        self.last_audit = None
+        self._rung = 0                 # 0 routed, 1 masked, 2 host oracle
+        self._oracle = None            # rung-2 ref_py mirror
+        self._lookup_no = 0            # lookup-epoch counter (fault key)
+        self._since_audit = 0
+        self._telemetry_until = 0      # lookup epoch the blackout ends at
+        self._last_ctrl_occ = None     # last occupancy the controller saw
+        self._fired: set = set()       # one-shot fault-event indices
         if not self.device:
             self.index = SplayList(max_level=max_level, p=p)
             return
@@ -109,11 +145,13 @@ class PagedKVPool:
     # -- device epochs ----------------------------------------------------
 
     def _epoch(self, kinds, keys, upd, aggregate, plane_search,
-               ordered=False):
+               ordered=False, routed=True):
         """One padded op/lookup epoch through ``run_epoch``, stepping
         the overflow machine and (on lookup epochs) the controller.
         ``ordered`` lets the plane-search epoch answer
-        ``OP_PRED``/``OP_RANGE`` lanes (DESIGN.md §5.10)."""
+        ``OP_PRED``/``OP_RANGE`` lanes (DESIGN.md §5.10); ``routed=
+        False`` runs the sharded lookup through the masked replicated
+        trace — rung 1 of the degradation ladder (§5.11)."""
         sx, rc = self._sx, self._rc
         B = kinds.shape[0]
         rebuild = self._rebuild_pending or self.ctrl.force_rebuild
@@ -128,7 +166,7 @@ class PagedKVPool:
             split=self.ctrl.split if sharded else "lanes",
             route_slack=(self.ctrl.slack_of(self.ctrl_cfg)
                          if sharded else None),
-            ordered=ordered)
+            ordered=ordered, routed=routed)
         self._st, self._plane = st, plane
         self._rebuild_pending, self._pressed = rc.overflow_machine_step(
             int(ovf), int(st.size), B, self.index_width, self._pressed)
@@ -138,8 +176,20 @@ class PagedKVPool:
             self.last_occupancy = np.asarray(occ, np.int64)
             self.spill_traj.append(int(spl))
             self.share_traj.append(rc.max_share(self.last_occupancy))
+            if self._lookup_no < self._telemetry_until:
+                # telemetry blackout (FAULT_TELEMETRY): the controller
+                # is starved — zero spill, occupancy frozen at the last
+                # delivered sample.  Serving stays correct; only the
+                # adaptivity loop pauses.
+                from repro.core import faults as fl
+                self.stats["telemetry_dropped"] += 1
+                spl_fb, occ_fb = fl.mangle_telemetry(
+                    int(spl), occ, self._last_ctrl_occ)
+            else:
+                spl_fb, occ_fb = int(spl), np.asarray(occ)
+                self._last_ctrl_occ = occ_fb
             self.ctrl = rc.controller_step(
-                self.ctrl_cfg, self.ctrl, int(spl), np.asarray(occ), B)
+                self.ctrl_cfg, self.ctrl, spl_fb, occ_fb, B)
         else:
             self.stats["flush_epochs"] += 1
             # flush epochs route nothing; still clear a one-shot rebuild
@@ -152,6 +202,11 @@ class PagedKVPool:
         the next lookup epoch answers from it."""
         if not self.device or not self._pending:
             return
+        if self._rung >= 2:
+            # the plane is still corrupt: never refresh incrementally
+            # from it — every flush rebuilds from the authoritative
+            # state until an audit passes
+            self._rebuild_pending = True
         sx = self._sx
         ops, self._pending = self._pending, []
         B = self.index_batch
@@ -165,6 +220,156 @@ class PagedKVPool:
                 kinds, keys, np.ones(len(chunk), bool), B)
             self._epoch(kd, ks, up, aggregate=False, plane_search=False)
 
+    # -- §5.11 fault tolerance: audit, ladder, chaos hooks ----------------
+
+    def _plane_segments(self) -> int:
+        if self._sharded and self._dix.plane_is_segmented(self._plane):
+            return int(self.mesh.shape[self.axis])
+        return 1
+
+    def audit(self):
+        """Run the ``core.plane_check`` fsck over the current
+        ``(state, plane)`` pair and return the ``PlaneAudit``
+        (also kept as ``self.last_audit``)."""
+        from repro.core import plane_check as pcheck
+        a = pcheck.audit_plane(self._st, self._plane,
+                               n_segments=self._plane_segments())
+        self.stats["audits"] += 1
+        self.last_audit = a
+        return a
+
+    def _repair_epoch(self) -> None:
+        """One forced full-rebuild epoch over an all-pad (pure-read)
+        batch: the edge-triggered rebuild machine re-derives the plane
+        from the authoritative state, discarding whatever corruption
+        the audit found."""
+        sx = self._sx
+        self._rebuild_pending = True
+        kd, ks, up, _ = sx.pad_op_batch(
+            np.empty(0, np.int32), np.empty(0, np.int32),
+            np.empty(0, bool), self.index_batch)
+        self._epoch(kd, ks, up, aggregate=False, plane_search=False)
+
+    def _consume_faults(self) -> None:
+        """Fire this lookup epoch's scheduled ``FaultPlan`` events —
+        exactly once each — in the window between the mutation flush
+        and the lookup answer (the §5.11 crash point)."""
+        if self.fault_plan is None:
+            return
+        from repro.core import faults as fl
+        for i, ev in enumerate(self.fault_plan.events):
+            if ev.epoch != self._lookup_no or i in self._fired:
+                continue
+            self._fired.add(i)
+            self.stats["faults_injected"] += 1
+            if ev.family == fl.FAULT_CRASH:
+                raise fl.InjectedCrash(
+                    f"injected crash at lookup epoch {self._lookup_no}")
+            if ev.family == fl.FAULT_BITFLIP:
+                self._plane, _ = fl.flip_plane_bits(
+                    self._plane, self.fault_plan.rng_for(ev), ev.arg)
+            elif ev.family == fl.FAULT_SHARD_LOSS:
+                self.on_shard_loss(ev.arg)
+            elif ev.family == fl.FAULT_TELEMETRY:
+                self._telemetry_until = self._lookup_no + max(ev.arg, 1)
+
+    def _audit_gate(self) -> bool:
+        """Audit if due; on failure repair (forced rebuild) and
+        re-audit.  Returns True when the plane is now provably clean.
+        A plane that stays corrupt after the rebuild pins the pool at
+        rung 2 (host oracle) — no plane answer is ever served off a
+        failed audit."""
+        if not self.device or self.audit_every <= 0:
+            return True
+        self._since_audit += 1
+        if self._rung == 0 and self._since_audit < self.audit_every:
+            return True
+        self._since_audit = 0
+        from repro.core import plane_check as pcheck
+        if pcheck.audit_ok(self.audit()):
+            return True
+        self.stats["audit_failures"] += 1
+        self._rung = max(self._rung, 1)
+        self._repair_epoch()
+        if pcheck.audit_ok(self.audit()):
+            self.stats["repairs"] += 1
+            return True
+        self._rung = 2
+        return False
+
+    def _pre_lookup(self) -> bool:
+        """The §5.11 lookup preamble shared by every read entry point:
+        flush mutations, fire scheduled faults (may raise
+        ``InjectedCrash``), then gate on the audit."""
+        self._flush()
+        self._consume_faults()
+        return self._audit_gate()
+
+    def _post_lookup(self, clean: bool) -> None:
+        """Climb one rung per clean pass — the masked (and oracle)
+        rungs are each observably exercised on the way back to routed
+        steady state, so recovery is bounded but never skips a rung."""
+        self._lookup_no += 1
+        if clean and self._rung > 0:
+            self._rung -= 1
+            if self._rung == 0:
+                self._oracle = None
+
+    def _oracle_contains(self, chunk) -> np.ndarray:
+        """Rung 2: answer membership from a host ``ref_py.SplayList``
+        mirror of the live session set (rebuilt from ``chains`` on
+        first use, kept in sync by ``create``/``release``)."""
+        if self._oracle is None:
+            self._oracle = SplayList(max_level=self._max_level,
+                                     p=self._p)
+            for s in sorted(self.chains):
+                self._oracle.insert(int(s))
+        return np.array([self._oracle.contains(int(s)) for s in chunk],
+                        bool)
+
+    def on_shard_loss(self, n_survivors: int) -> None:
+        """Shrink the serving mesh to ``n_survivors`` shards
+        (S -> S'): the lost shards' plane blocks are unrecoverable, so
+        the plane is rebuilt from the authoritative state
+        (``from_state_device``) and re-laid-out on the surviving mesh
+        via ``train.elastic.remesh`` + ``shard_index_plane`` (falling
+        back to replicated when the width no longer divides).  The
+        controller re-initializes for the new shard count and the pool
+        serves at least one masked epoch (rung 1) before climbing back
+        to routed."""
+        import jax
+
+        from repro.parallel import sharding as shd
+        from repro.train import elastic
+        self.stats["remeshes"] += 1
+        n = max(int(n_survivors), 1)
+        devs = jax.devices()[:n]
+        if n > 1 and self.index_width % n == 0 and len(devs) == n:
+            mesh = elastic.remesh(devs, model_parallel=n)
+        else:
+            mesh = None
+        self.mesh = mesh
+        n_shards = (int(mesh.shape[self.axis])
+                    if mesh is not None else 1)
+        self._sharded = mesh is not None and n_shards > 1
+        # the state must leave the lost devices too: re-place it
+        # replicated on the survivor mesh (or the first survivor)
+        # before the rebuild jit traces over it
+        if self._sharded:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self._st = jax.device_put(
+                self._st, NamedSharding(mesh, PartitionSpec()))
+        else:
+            self._st = jax.device_put(self._st, devs[0])
+        self._plane = self._dix.from_state_device(
+            self._st, n_levels=self._max_level, width=self.index_width)
+        if self._sharded:
+            self._plane = shd.shard_index_plane(self._plane, mesh)
+        self.ctrl_cfg, self.ctrl = self._rc.init_controller(n_shards)
+        self.last_occupancy = np.zeros(max(n_shards, 1), np.int64)
+        self._last_ctrl_occ = None
+        self._rung = max(self._rung, 1)
+
     def lookup_batch(self, seq_ids) -> np.ndarray:
         """Vector membership: ``out[i]`` iff ``seq_ids[i]`` is a live
         session.  Device mode answers every lane from the index plane
@@ -176,19 +381,28 @@ class PagedKVPool:
         if not self.device:
             return np.array([self.index.contains(int(s))
                              for s in seq_ids], bool)
-        self._flush()
+        clean = self._pre_lookup()
         sx = self._sx
         out = np.zeros(seq_ids.size, bool)
         B = self.index_batch
         for i in range(0, seq_ids.size, B):
             chunk = seq_ids[i:i + B].astype(np.int32)
+            if self._rung >= 2:
+                n = chunk.size
+                out[i:i + n] = self._oracle_contains(chunk)
+                self.stats["degraded_host"] += n
+                continue
             kd, ks, up, n = sx.pad_op_batch(
                 np.full(chunk.size, sx.OP_CONTAINS, np.int32), chunk,
                 np.ones(chunk.size, bool), B)
             res = self._epoch(kd, ks, up, aggregate=True,
-                              plane_search=True)
+                              plane_search=True,
+                              routed=self._rung == 0)
             out[i:i + n] = res[:n]
             self.stats["plane_queries"] += n
+            if self._rung == 1:
+                self.stats["degraded_masked"] += n
+        self._post_lookup(clean)
         return out
 
     def predecessor(self, seq_id: int) -> Optional[int]:
@@ -203,15 +417,25 @@ class PagedKVPool:
         if not self.device:
             cand = [s for s in self.chains if s <= seq_id]
             return max(cand) if cand else None
-        self._flush()
+        clean = self._pre_lookup()
+        if self._rung >= 2:
+            # rung 2: the plane is untrusted — answer from the host
+            # live-set metadata (exactly the host backend's rule)
+            self.stats["degraded_host"] += 1
+            self._post_lookup(clean)
+            cand = [s for s in self.chains if s <= seq_id]
+            return max(cand) if cand else None
         sx = self._sx
         B = self.index_batch
         kd, ks, up, _ = sx.pad_op_batch(
             np.array([sx.OP_PRED], np.int32),
             np.array([int(seq_id)], np.int32), np.zeros(1, bool), B)
         res = self._epoch(kd, ks, up, aggregate=True, plane_search=True,
-                          ordered=True)
+                          ordered=True, routed=self._rung == 0)
         self.stats["plane_queries"] += 1
+        if self._rung == 1:
+            self.stats["degraded_masked"] += 1
+        self._post_lookup(clean)
         pred = int(res[0])
         return None if pred == self._sx.NEG_INF_32 else pred
 
@@ -235,12 +459,24 @@ class PagedKVPool:
             truncated = max(count - max_range, 0)
             self.stats["range_truncated"] += truncated
             return ids[:max_range], count, truncated
-        self._flush()
+        clean = self._pre_lookup()
+        if self._rung >= 2:
+            self.stats["degraded_host"] += 1
+            self._post_lookup(clean)
+            ids = np.asarray(sorted(s for s in self.chains
+                                    if lo <= s <= hi), np.int64)
+            count = ids.size
+            truncated = max(count - max_range, 0)
+            self.stats["range_truncated"] += truncated
+            return ids[:max_range], count, truncated
         from repro.kernels import ops as kops
         keys, cnt, tr = kops.splay_range_scan(
             self._plane, np.array([int(lo)], np.int32),
             np.array([int(hi)], np.int32), max_range=int(max_range))
         self.stats["plane_queries"] += 1
+        if self._rung == 1:
+            self.stats["degraded_masked"] += 1
+        self._post_lookup(clean)
         count, truncated = int(cnt[0]), int(tr[0])
         self.stats["range_truncated"] += truncated
         ids = np.asarray(keys[0], np.int64)[:min(count, max_range)]
@@ -261,6 +497,8 @@ class PagedKVPool:
         self.lengths[seq_id] = 0
         if self.device:
             self._pending.append((self._sx.OP_INSERT, int(seq_id)))
+            if self._oracle is not None:
+                self._oracle.insert(int(seq_id))
         else:
             self.index.insert(seq_id)
         return True
@@ -292,6 +530,8 @@ class PagedKVPool:
             self.lengths.pop(seq_id, None)
             if self.device:
                 self._pending.append((self._sx.OP_DELETE, int(seq_id)))
+                if self._oracle is not None:
+                    self._oracle.delete(int(seq_id))
             else:
                 self.index.delete(seq_id)
 

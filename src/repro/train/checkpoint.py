@@ -47,23 +47,34 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        # serializes join-then-spawn: without it, two racing save()
+        # calls can both observe the old writer, both spawn, and
+        # interleave their tmp-dir publishes under the same step path
+        self._lock = threading.Lock()
 
     # -- save ----------------------------------------------------------------
 
     def save(self, step: int, params, opt_state=None, extra: Optional[
             Dict[str, Any]] = None, blocking: bool = False):
-        """Snapshot to host memory synchronously, write asynchronously."""
+        """Snapshot to host memory synchronously, write asynchronously.
+        Any in-flight background writer is joined *before* the next
+        write starts (one writer at a time, in submission order)."""
         flat = _flatten({"params": params, "opt": opt_state or {}})
         host = {k: np.asarray(v) for k, v in flat.items()
                 if v is not None}
-        self.wait()   # one in-flight save at a time
-        self._thread = threading.Thread(
-            target=self._write, args=(step, host, extra or {}))
-        self._thread.start()
+        with self._lock:
+            self._join_locked()   # one in-flight save at a time
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, extra or {}))
+            self._thread.start()
         if blocking:
             self.wait()
 
     def wait(self):
+        with self._lock:
+            self._join_locked()
+
+    def _join_locked(self):
         if self._thread is not None:
             self._thread.join()
             self._thread = None
@@ -133,7 +144,7 @@ class CheckpointManager:
                     digest = hashlib.sha256(f.read()).hexdigest()
                 if digest != info["sha256"]:
                     raise IOError(f"checksum mismatch for {name} at "
-                                  f"step {step}")
+                                  f"step {step}: {path}")
             out[name] = np.load(path)
         return out, manifest.get("extra", {})
 

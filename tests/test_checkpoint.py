@@ -96,3 +96,41 @@ def test_straggler_monitor_flags_slow_host():
         flagged = mon.check(7, 5.0)
     assert flagged
     assert not mon.check(1, 1.1)
+
+
+def test_verify_error_names_array_and_path(tmp_path):
+    """A checksum failure must say WHICH array at WHICH path broke —
+    'IOError' alone is useless on a 1000-array snapshot."""
+    mgr = ck.CheckpointManager(str(tmp_path))
+    mgr.save(4, _tree(), blocking=True)
+    d = os.path.join(str(tmp_path), "step_0000000004")
+    victim = "params__b__c.npy"
+    with open(os.path.join(d, victim), "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        f.write(b"\x13")
+    with pytest.raises(IOError, match=r"params/b/c.*step 4.*"
+                                      r"params__b__c\.npy"):
+        mgr.load()
+
+
+def test_rapid_saves_serialize_and_all_publish(tmp_path):
+    """Back-to-back non-blocking saves must join the in-flight writer
+    before spawning the next (the background-thread race): every step
+    publishes completely and loads clean."""
+    import threading
+
+    mgr = ck.CheckpointManager(str(tmp_path), keep=32)
+    ts = [threading.Thread(
+        target=mgr.save, args=(s, {"a": np.full((64, 64), float(s))}),
+        kwargs={"blocking": False}) for s in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    mgr.wait()
+    assert mgr.steps() == list(range(8))
+    assert not [d for d in os.listdir(str(tmp_path))
+                if d.endswith(".tmp")]
+    for s in range(8):
+        flat, _ = mgr.load(s)            # verify=True: checksums hold
+        assert float(flat["params/a"][0, 0]) == float(s)

@@ -237,3 +237,47 @@ def test_run_serving_controlled_meshless_degrades_to_run_serving():
     assert occ1.shape == (E, 1)
     assert len(states) == E
     assert states[-1].retraces == 0 and states[-1].escalations == 0
+
+
+# ---------------------------------------------------------------------------
+# serialization (DESIGN.md §5.11 snapshots)
+# ---------------------------------------------------------------------------
+
+
+def test_serialization_roundtrip_continues_bit_identically():
+    """controller_to_dict/from_dict must be exact: a controller
+    restored mid-run continues its slack ladder, EWMA, calm streak,
+    and rebuild backoff through the same epochs to the same states as
+    the uninterrupted one (the snapshot/restore contract)."""
+    import json
+
+    cfg, s0 = rc.init_controller(S, ewma_alpha=0.25, calm_epochs=2)
+    rng = np.random.default_rng(7)
+    epochs = []
+    for _ in range(12):
+        occ = rng.multinomial(NQ, rng.dirichlet(np.ones(S) * 0.4))
+        epochs.append((occ, _spill_for(cfg, s0, occ)))
+    # drive 6 epochs, serialize, drive 6 more on both copies
+    ref = s0
+    for occ, sp in epochs[:6]:
+        ref = rc.controller_step(cfg, ref, sp, occ, NQ)
+    blob = json.dumps(rc.controller_to_dict(cfg, ref))   # JSON-safe
+    cfg2, back = rc.controller_from_dict(json.loads(blob))
+    assert cfg2 == cfg and back == ref
+    cont = ref
+    for occ, sp in epochs[6:]:
+        cont = rc.controller_step(cfg, cont, sp, occ, NQ)
+        back = rc.controller_step(cfg2, back, sp, occ, NQ)
+    assert back == cont
+    assert isinstance(back.slack_idx, int) or back == cont
+
+
+def test_serialization_preserves_every_field():
+    cfg, s = rc.init_controller(S)
+    s = s._replace(slack_idx=2, split="mass", force_rebuild=True,
+                   ewma=0.71, calm=1, backoff=4, mass_bad=2,
+                   retraces=5, escalations=3, last_spill=17,
+                   last_share=0.4, last_gini=0.2)
+    cfg2, s2 = rc.controller_from_dict(rc.controller_to_dict(cfg, s))
+    assert s2 == s and cfg2 == cfg
+    assert isinstance(cfg2.slack_ladder, tuple)

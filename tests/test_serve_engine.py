@@ -156,3 +156,48 @@ def test_idle_clock_jumps_to_next_arrival(smoke):
     assert set(res) == {0}
     assert eng.latencies[0] < 100, "latency must not include idle time"
     assert eng.clock >= 100
+
+
+def test_injected_crash_retries_with_backoff_same_results(smoke):
+    """DESIGN.md §5.11: an InjectedFault surfacing mid-wave must not
+    raise out of run() — the wave requeues, the clock backs off
+    (doubling), and the retried serve produces exactly the outputs of
+    an undisturbed engine (greedy decode is deterministic)."""
+    from repro.core import faults as fl
+    arr = wl.poisson_zipf_arrivals(3, float("inf"), 64,
+                                   prompt_len=(2, 4), max_new=3,
+                                   seed=5)
+    # one wave holds all three requests: left-pad prefill makes
+    # outputs a function of wave composition, so the retried wave must
+    # re-form identically for the bit-identity assertion to be fair
+    clean = _engine(smoke, max_batch=3, device_index=True,
+                    index_width=16, index_batch=4)
+    _submit_stream(clean, arr)
+    want = clean.run()
+
+    plan = fl.FaultPlan(seed=1, events=[
+        fl.FaultEvent(1, fl.FAULT_CRASH)])
+    eng = _engine(smoke, max_batch=3, device_index=True,
+                  index_width=16, index_batch=4, fault_plan=plan)
+    _submit_stream(eng, arr)
+    got = eng.run()
+    assert got == want
+    assert eng.degraded_retries == 1
+    assert eng._consec_fail == 0 and eng._backoff == 1   # reset after
+    assert eng.pool.stats["faults_injected"] == 1
+
+
+def test_persistent_faults_surface_after_max_retries(smoke):
+    """A fault that fires every epoch is not transient: after
+    max_retries consecutive failed waves the engine must re-raise
+    rather than spin forever."""
+    from repro.core import faults as fl
+    plan = fl.FaultPlan(seed=2, events=[
+        fl.FaultEvent(e, fl.FAULT_CRASH) for e in range(64)])
+    eng = _engine(smoke, device_index=True, index_width=16,
+                  index_batch=4, fault_plan=plan, max_retries=3)
+    eng.submit(Request(seq_id=0, prompt=np.array([3, 4], np.int32),
+                       max_new=2))
+    with pytest.raises(fl.InjectedCrash):
+        eng.run()
+    assert eng.degraded_retries == 4      # 3 retries + the last straw

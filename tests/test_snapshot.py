@@ -1,0 +1,142 @@
+"""Crash-consistent serving snapshots (DESIGN.md §5.11), meshless:
+save/restore roundtrips for host and device pools, the exactly-once
+pending-op replay contract, engine-state rehydration, degradation-
+state carriage, and format guards.  The mesh/shrunk-mesh restore
+matrix and the mid-trace crash replay run in the
+``benchmarks/chaos_probe.py --parity`` subprocess (CI "Chaos
+recovery")."""
+
+import numpy as np
+import pytest
+
+from repro.core import workload as wl
+from repro.serve import snapshot as snap
+from repro.serve.kv_cache import PagedKVPool
+from repro.train.checkpoint import CheckpointManager
+
+W, B = 32, 8
+
+
+def _device_pool(**kw):
+    return PagedKVPool(48, 8, device=True, index_width=W,
+                       index_batch=B, **kw)
+
+
+def _drive(pool, trace, lo, hi, record=None):
+    kinds = np.asarray(trace.kinds)
+    sids = np.asarray(trace.seq_ids)
+    for t in range(lo, hi):
+        k, s = int(kinds[t]), int(sids[t])
+        if k == wl.KV_CREATE:
+            pool.create(s)
+        elif k == wl.KV_RELEASE:
+            pool.release(s)
+        elif record is not None:
+            record.append((t, bool(pool.lookup_batch([s])[0])))
+
+
+def test_host_pool_roundtrip(tmp_path):
+    trace = wl.kv_request_trace(60, 12, seed=1)
+    pool = PagedKVPool(48, 8, device=False)
+    _drive(pool, trace, 0, 60)
+    mgr = CheckpointManager(str(tmp_path))
+    snap.save_serving_snapshot(mgr, 60, pool)
+    back, eng_state, summary = snap.restore_serving_snapshot(mgr)
+    assert eng_state is None and "host-pool" in summary
+    assert back.chains == pool.chains and back.free == pool.free
+    for s in range(12):
+        assert back.index.contains(s) == pool.index.contains(s)
+
+
+def test_device_pool_roundtrip_verdicts_bit_identical(tmp_path):
+    trace = wl.kv_request_trace(80, 12, seed=2)
+    ref, pool = _device_pool(), _device_pool()
+    ref_rec = []
+    _drive(ref, trace, 0, 80, ref_rec)
+    rec = []
+    _drive(pool, trace, 0, 40, rec)
+    mgr = CheckpointManager(str(tmp_path))
+    snap.save_serving_snapshot(mgr, 40, pool)
+    back, _, summary = snap.restore_serving_snapshot(mgr)
+    assert "plane re-laid" in summary and "shards 1->1" in summary
+    _drive(back, trace, 40, 80, rec)
+    assert rec == ref_rec
+    assert sorted(back.chains) == sorted(ref.chains)
+
+
+def test_pending_ops_replay_exactly_once(tmp_path):
+    # mutations buffered but not yet flushed at snapshot time must
+    # apply exactly once after restore: snapshot with a non-empty
+    # pending buffer, restore, and the next lookup's flush applies it
+    pool = _device_pool()
+    for s in (3, 5, 9):
+        pool.create(s)
+    assert len(pool._pending) == 3          # no lookup yet: unflushed
+    mgr = CheckpointManager(str(tmp_path))
+    snap.save_serving_snapshot(mgr, 1, pool)
+    back, _, summary = snap.restore_serving_snapshot(mgr)
+    assert "3 pending ops" in summary
+    assert back._pending == pool._pending
+    got = [bool(back.lookup_batch([s])[0]) for s in (3, 5, 9, 4)]
+    assert got == [True, True, True, False]
+    assert back._pending == []
+    # a fresh snapshot AFTER the flush carries an empty buffer — an op
+    # can never be both applied and pending (the exactly-once half)
+    snap.save_serving_snapshot(mgr, 2, back)
+    again, _, summary2 = snap.restore_serving_snapshot(mgr)
+    assert "0 pending ops" in summary2
+    assert [bool(again.lookup_batch([s])[0]) for s in (3, 9, 4)] \
+        == [True, True, False]
+
+
+def test_engine_state_roundtrip():
+    from repro.serve.engine import Request
+
+    class Shell:                 # engine surface the serializer reads
+        clock = 37
+        tokens_out = 11
+        stalls = 2
+        preemptions = 1
+        degraded_retries = 3
+        latencies = {4: 9, 7: 12}
+        queue = [Request(seq_id=8, prompt=np.array([1, 2, 3], np.int32),
+                         max_new=5, arrival=40)]
+
+    state = snap._engine_state(Shell())
+    fresh = Shell()
+    fresh.clock = 0
+    fresh.latencies = {}
+    fresh.queue = []
+    snap.apply_engine_state(fresh, state)
+    assert fresh.clock == 37 and fresh.degraded_retries == 3
+    assert fresh.latencies == {4: 9.0, 7: 12.0}
+    q = fresh.queue[0]
+    assert (q.seq_id, q.max_new, q.arrival) == (8, 5, 40)
+    np.testing.assert_array_equal(q.prompt, [1, 2, 3])
+
+
+def test_degradation_state_and_overrides_carry(tmp_path):
+    pool = _device_pool(audit_every=2)
+    pool.create(1)
+    pool.lookup_batch([1])
+    pool._rung = 1
+    mgr = CheckpointManager(str(tmp_path))
+    snap.save_serving_snapshot(mgr, 5, pool)
+    back, _, _ = snap.restore_serving_snapshot(mgr)
+    assert back._rung == 1 and back.audit_every == 2
+    assert back._lookup_no == pool._lookup_no
+    # restore-time overrides: a restored machine usually wants
+    # auditing on and the crashed run's fault plan off
+    back2, _, _ = snap.restore_serving_snapshot(mgr, audit_every=1)
+    assert back2.audit_every == 1 and back2.fault_plan is None
+
+
+def test_non_snapshot_checkpoint_refused(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"w": np.ones(4)}, extra={"data_step": 3},
+             blocking=True)
+    with pytest.raises(ValueError, match="not a serving snapshot"):
+        snap.restore_serving_snapshot(mgr)
+    with pytest.raises(FileNotFoundError):
+        snap.restore_serving_snapshot(CheckpointManager(
+            str(tmp_path / "empty")))
